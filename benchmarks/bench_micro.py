@@ -1,0 +1,92 @@
+"""Fig. 9 reproduction: microbenchmark ablation of LSHS vs locality-blind
+scheduling (round-robin ~ Dask, load-only dynamic ~ Ray) on the paper's six
+operations.  Two regimes per op:
+
+  * measured   — wall time on CPU-scale arrays (numpy block backend),
+  * simulated  — per-node network/memory loads at the paper's cluster scale
+                 (16 nodes x 32 workers) with metadata-only execution.
+
+Derived column: simulated total network elements (lower is better) and the
+max-memory imbalance.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ArrayContext, ClusterSpec
+
+from .common import emit, timeit
+
+K, R = 16, 32            # paper cluster: 16 nodes x 32 workers
+MEAS_N = 1 << 20         # measured-regime elements per array (~8 MB)
+SIM_ROWS = 1 << 14       # simulated-regime logical rows (metadata only)
+
+
+def _ctx(scheduler: str, backend: str, seed=0, ng=None):
+    return ArrayContext(
+        cluster=ClusterSpec(K, R), node_grid=ng or (K, 1),
+        scheduler=scheduler, backend=backend, seed=seed,
+    )
+
+
+def _operands(ctx, op: str, n_rows: int, d: int = 64, q: int = 64):
+    X = ctx.random((n_rows, d), grid=(q, 1))
+    if op in ("X+Y", "sum"):
+        Y = ctx.random((n_rows, d), grid=(q, 1))
+        return X, Y
+    if op in ("X@y", "X.T@y"):
+        y = ctx.random((d, 1), grid=(1, 1)) if op == "X@y" else ctx.random(
+            (n_rows, 1), grid=(q, 1))
+        return X, y
+    if op in ("X.T@X", "X@Y.T"):
+        Y = ctx.random((n_rows, d), grid=(q, 1))
+        return X, Y
+    raise KeyError(op)
+
+
+def _run_op(ctx, op: str, A, B):
+    if op == "X+Y":
+        return (A + B).compute()
+    if op == "sum":
+        return A.sum(axis=0).compute()
+    if op == "X@y":
+        return (A @ B).compute()
+    if op == "X.T@y":
+        return (A.T @ B).compute()
+    if op == "X.T@X":
+        return (A.T @ B).compute()
+    if op == "X@Y.T":
+        return (A @ B.T).compute()
+    raise KeyError(op)
+
+
+OPS = ("X+Y", "sum", "X@y", "X.T@y", "X.T@X", "X@Y.T")
+
+
+def run(quick: bool = True) -> None:
+    for op in OPS:
+        for sched in ("lshs", "roundrobin", "dynamic"):
+            # measured wall time (small scale, numpy blocks)
+            def measured():
+                ctx = _ctx(sched, "numpy")
+                A, B = _operands(ctx, op, MEAS_N // 64)
+                _run_op(ctx, op, A, B)
+
+            t = timeit(measured, repeats=3 if quick else 7)
+
+            # simulated loads at paper scale
+            ctx = _ctx(sched, "sim", seed=1)
+            rows = SIM_ROWS
+            A, B = _operands(ctx, op, rows, q=K * R // 8)
+            ctx.reset_loads()
+            _run_op(ctx, op, A, B)
+            s = ctx.state.summary()
+            emit(
+                f"micro.{op}.{sched}",
+                t * 1e6,
+                f"sim_net={int(s['total_net'])};mem_imb={s['mem_imbalance']:.2f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

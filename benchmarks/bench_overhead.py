@@ -1,0 +1,53 @@
+"""Fig. 8 reproduction: control overhead (γ) and RFC overhead.
+
+γ is measured as scheduling+dispatch time per block for a blocked creation
+(the driver-side cost that bounds NumS's scalability, §7); RFC overhead as
+the gap between executing -x through the executor vs raw numpy.  The fusion
+pass (beyond-paper; §9 future work) is measured as the γ reduction on a
+3-op elementwise chain.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ArrayContext, ClusterSpec
+
+from .common import emit, timeit
+
+
+def run(quick: bool = True) -> None:
+    # γ: per-block dispatch cost as the number of blocks grows
+    for blocks in (64, 256, 1024):
+        def create():
+            ctx = ArrayContext(cluster=ClusterSpec(16, 32), node_grid=(16, 1),
+                               backend="sim")
+            ctx.random((blocks * 64, 64), grid=(blocks, 1))
+
+        t = timeit(create, repeats=3 if quick else 7)
+        emit(f"overhead.gamma.{blocks}blocks", t * 1e6,
+             f"us_per_block={t * 1e6 / blocks:.1f}")
+
+    # RFC overhead: -x through the runtime vs raw numpy
+    n = 1 << 22
+    x_np = np.random.default_rng(0).standard_normal(n)
+    t_np = timeit(lambda: -x_np, repeats=5)
+
+    ctx = ArrayContext(cluster=ClusterSpec(1, 1), node_grid=(1,), backend="numpy")
+    x = ctx.from_numpy(x_np, grid=(1,))
+    t_rfc = timeit(lambda: (-x).compute(), repeats=5)
+    emit("overhead.rfc.neg", t_rfc * 1e6,
+         f"numpy_us={t_np * 1e6:.1f};overhead_us={(t_rfc - t_np) * 1e6:.1f}")
+
+    # fusion: RFC count for sigmoid->square->1-x chain, fused vs not
+    for fuse in (False, True):
+        ctx = ArrayContext(cluster=ClusterSpec(4, 4), node_grid=(4, 1),
+                           backend="sim", fuse=fuse)
+        X = ctx.random((4096, 64), grid=(16, 1))
+        n0 = ctx.executor.stats.n_rfc
+        (1.0 - X.sigmoid().square()).compute()
+        rfcs = ctx.executor.stats.n_rfc - n0
+        emit(f"overhead.fusion.{'on' if fuse else 'off'}", 0.0, f"rfcs={rfcs}")
+
+
+if __name__ == "__main__":
+    run()

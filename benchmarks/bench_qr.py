@@ -1,0 +1,43 @@
+"""Fig. 11/12a reproduction: direct and indirect TSQR — wall time vs the
+numpy QR oracle, plus simulated weak-scaling loads of the LSHS schedule."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ArrayContext, ClusterSpec
+from repro.linalg import tsqr_direct, tsqr_indirect
+
+from .common import emit, timeit
+
+
+def run(quick: bool = True) -> None:
+    n, d = (1 << 16, 64) if quick else (1 << 18, 128)
+    x_np = np.random.default_rng(0).standard_normal((n, d))
+
+    t_np = timeit(lambda: np.linalg.qr(x_np), repeats=3)
+    emit("qr.numpy_oracle", t_np * 1e6, "")
+
+    for name, fn in (("direct", tsqr_direct), ("indirect", tsqr_indirect)):
+        def run_one():
+            ctx = ArrayContext(cluster=ClusterSpec(4, 4), node_grid=(4, 1),
+                               backend="numpy")
+            X = ctx.from_numpy(x_np, grid=(16, 1))
+            fn(ctx, X)
+
+        t = timeit(run_one, repeats=3 if quick else 7)
+        emit(f"qr.tsqr_{name}", t * 1e6, f"vs_numpy={t / t_np:.2f}x")
+
+    # weak scaling (simulated): double rows with nodes; objective per node
+    for k in (2, 4, 8, 16):
+        ctx = ArrayContext(cluster=ClusterSpec(k, 32), node_grid=(k, 1),
+                           backend="sim")
+        X = ctx.random((k * (1 << 14), 256), grid=(k * 4, 1))
+        ctx.reset_loads()
+        tsqr_indirect(ctx, X)
+        s = ctx.state.summary()
+        emit(f"qr.weak_scaling.k{k}", 0.0,
+             f"max_mem={int(s['max_mem'])};net={int(s['total_net'])}")
+
+
+if __name__ == "__main__":
+    run()

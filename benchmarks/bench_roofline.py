@@ -1,0 +1,138 @@
+"""§Roofline: per-cell roofline terms from the multi-pod dry-run artifact.
+
+Reads benchmarks/artifacts/dryrun.jsonl (written by repro.launch.dryrun),
+derives the three terms (compute/memory/collective, seconds per step), the
+dominant bottleneck, MODEL_FLOPS/step_FLOPs, and the roofline fraction.
+Emits one CSV row per (arch x shape x mesh) cell; ``--table`` renders the
+markdown table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+from repro.configs import get_config
+from repro.launch.shapes import SHAPES
+from repro.sharding.estimator import local_param_numel
+from repro.sharding.plans import Plan, candidate_plans
+from repro.sharding.roofline import roofline
+
+from .common import emit
+
+_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+_V2 = os.path.join(_DIR, "dryrun_v2_combined.jsonl")
+# prefer the optimizer-v2 artifact (final); fall back to the v1 sweep
+ART = _V2 if os.path.exists(_V2) else os.path.join(_DIR, "dryrun.jsonl")
+
+MESH_AXES = {"16x16": {"data": 16, "model": 16},
+             "2x16x16": {"pod": 2, "data": 16, "model": 16}}
+
+
+def load_records(path: str = None) -> Dict:
+    path = path or os.environ.get("DRYRUN_ARTIFACT", ART)
+    best = {}
+    if not os.path.exists(path):
+        return best
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except Exception:
+                continue
+            best[(r["arch"], r["shape"], r["mesh"])] = r
+    return best
+
+
+def _plan_from_record(cfg, rec) -> Plan:
+    name = (rec.get("plan") or "fsdp_tp_sp_full(").split("(")[0]
+    for p in candidate_plans(cfg, rec.get("kind", "train")):
+        if p.name == name:
+            return p
+    return Plan(name or "fallback")
+
+
+def cell_roofline(rec) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    cfg = get_config(rec["arch"])
+    mesh_axes = MESH_AXES[rec["mesh"]]
+    n_dev = 1
+    for v in mesh_axes.values():
+        n_dev *= v
+    plan = _plan_from_record(cfg, rec)
+    p_loc = local_param_numel(cfg, plan, mesh_axes)
+    coll = (rec.get("collectives") or {}).get("total", 0.0)
+    terms = roofline(
+        cfg, rec["kind"], rec["batch"], rec["seq"], n_dev, p_loc,
+        coll, remat=plan.remat, dispatch_mode=plan.dispatch_mode,
+    )
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "plan": rec.get("plan", "?"),
+        "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s, "dominant": terms.dominant,
+        "model_flops": terms.model_flops, "step_flops": terms.flops,
+        "useful_ratio": terms.model_flops / max(terms.flops, 1),
+        "roofline_fraction": terms.bound_fraction,
+        "hlo_flops_raw": (rec.get("cost") or {}).get("flops"),
+        "peak_bytes": (rec.get("memory") or {}).get("temp_bytes"),
+    }
+
+
+def run(quick: bool = True) -> None:
+    best = load_records()
+    for key in sorted(best):
+        rec = best[key]
+        if rec.get("status") == "skipped":
+            emit(f"roofline.{key[0]}.{key[1]}.{key[2]}", 0.0, "skipped")
+            continue
+        row = cell_roofline(rec)
+        if row is None:
+            emit(f"roofline.{key[0]}.{key[1]}.{key[2]}", 0.0,
+                 f"status={rec.get('status')}")
+            continue
+        emit(
+            f"roofline.{row['arch']}.{row['shape']}.{row['mesh']}",
+            max(row["compute_s"], row["memory_s"], row["collective_s"]) * 1e6,
+            f"dom={row['dominant']};frac={row['roofline_fraction']:.2f};"
+            f"c={row['compute_s']*1e3:.2f}ms;m={row['memory_s']*1e3:.2f}ms;"
+            f"n={row['collective_s']*1e3:.2f}ms;useful={row['useful_ratio']:.2f}",
+        )
+
+
+def markdown_table() -> str:
+    best = load_records()
+    lines = [
+        "| arch | shape | mesh | plan | compute (ms) | memory (ms) | "
+        "collective (ms) | dominant | MODEL/step FLOPs | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(best):
+        rec = best[key]
+        if rec.get("status") == "skipped":
+            lines.append(
+                f"| {key[0]} | {key[1]} | {key[2]} | — | — | — | — | "
+                f"skipped ({rec.get('reason','')[:40]}) | — | — |")
+            continue
+        row = cell_roofline(rec)
+        if row is None:
+            lines.append(f"| {key[0]} | {key[1]} | {key[2]} | — | — | — | — | "
+                         f"{rec.get('status')} | — | — |")
+            continue
+        lines.append(
+            f"| {row['arch']} | {row['shape']} | {row['mesh']} | "
+            f"{row['plan'].split('(')[0]} | {row['compute_s']*1e3:.2f} | "
+            f"{row['memory_s']*1e3:.2f} | {row['collective_s']*1e3:.2f} | "
+            f"**{row['dominant']}** | {row['useful_ratio']:.2f} | "
+            f"{row['roofline_fraction']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--table" in sys.argv:
+        print(markdown_table())
+    else:
+        run()

@@ -1,0 +1,34 @@
+"""Shared benchmark utilities.
+
+Timing protocol follows the paper (§8): every measurement repeats N times and
+drops the best and worst trials before averaging (cold-start bias).  Results
+are emitted as ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+ROWS: List[str] = []
+
+
+def timeit(fn: Callable[[], object], repeats: int = 5) -> float:
+    """Mean seconds per call, best+worst dropped (paper protocol)."""
+    times = []
+    for _ in range(max(repeats, 3)):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    inner = times[1:-1] if len(times) > 2 else times
+    return sum(inner) / len(inner)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def header() -> None:
+    print("name,us_per_call,derived", flush=True)

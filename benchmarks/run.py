@@ -1,0 +1,61 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Emits ``name,us_per_call,derived`` CSV (paper timing protocol: repeats with
+best/worst dropped).  The roofline section reads the dry-run artifact
+(benchmarks/artifacts/dryrun.jsonl) produced by ``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (
+    bench_bounds,
+    bench_serving,
+    bench_datasci,
+    bench_dgemm,
+    bench_logreg,
+    bench_micro,
+    bench_overhead,
+    bench_qr,
+    bench_roofline,
+    bench_tensor,
+)
+from .common import header
+
+SUITES = {
+    "micro": bench_micro,        # Fig. 9
+    "overhead": bench_overhead,  # Fig. 8
+    "dgemm": bench_dgemm,        # Fig. 10 / Table 2
+    "qr": bench_qr,              # Fig. 11 / 12a
+    "tensor": bench_tensor,      # Fig. 13
+    "logreg": bench_logreg,      # Fig. 12b / 14 / 15
+    "datasci": bench_datasci,    # Table 3 / Fig. 16
+    "bounds": bench_bounds,      # Appendix A
+    "serving": bench_serving,    # beyond-paper: continuous batching
+    "roofline": bench_roofline,  # §Roofline (reads dry-run artifact)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale repeats")
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+    header()
+    t0 = time.time()
+    for name, mod in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.run(quick=not args.full)
+        except Exception as ex:  # keep the suite going; record the failure
+            print(f"{name}.ERROR,0.0,{type(ex).__name__}:{ex}", flush=True)
+    print(f"# total {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Tensor-factorization inner loop (§8.4): MTTKRP as the closed-form ALS
+update, plus the double contraction — LSHS vs round-robin loads.
+
+    PYTHONPATH=src python examples/tensor_factorization.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import ArrayContext, ClusterSpec
+from repro.tensor import double_contraction, mttkrp
+
+
+def als_step(ctx, X, B, C):
+    """One (mode-1) alternating-least-squares update: M = MTTKRP(X, B, C),
+    then the small normal-equation solve on the driver."""
+    M = mttkrp(X, B, C)
+    BtB = (B.T @ B).to_numpy()
+    CtC = (C.T @ C).to_numpy()
+    G = BtB * CtC
+    return M.to_numpy() @ np.linalg.pinv(G)
+
+
+def main():
+    I = J = K = 48
+    F = 8
+    for sched in ("lshs", "roundrobin"):
+        ctx = ArrayContext(cluster=ClusterSpec(4, 4), node_grid=(4, 1, 1),
+                           scheduler=sched, backend="numpy", seed=0)
+        X = ctx.random((I, J, K), grid=(4, 1, 1))
+        B = ctx.random((J, F), grid=(1, 1))
+        C = ctx.random((K, F), grid=(1, 1))
+        ctx.reset_loads()
+        t0 = time.time()
+        A_new = als_step(ctx, X, B, C)
+        dt = time.time() - t0
+        s = ctx.state.summary()
+        print(f"[{sched:10s}] ALS step {dt*1e3:.0f}ms  A_new {A_new.shape}  "
+              f"net={s['total_net']:.0f} el  mem_imb={s['mem_imbalance']:.2f}")
+
+    # double contraction
+    ctx = ArrayContext(cluster=ClusterSpec(4, 4), node_grid=(1, 4, 1),
+                       backend="numpy", seed=1)
+    Xc = ctx.random((32, 48, 24), grid=(1, 4, 1))
+    Yc = ctx.random((48, 24, 8), grid=(4, 1, 1))
+    Z = double_contraction(Xc, Yc)
+    ref = np.tensordot(Xc.to_numpy(), Yc.to_numpy(), axes=2)
+    print("double contraction matches numpy:", np.allclose(Z.to_numpy(), ref))
+
+
+if __name__ == "__main__":
+    main()

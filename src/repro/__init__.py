@@ -1,0 +1,7 @@
+"""repro: NumS/LSHS (Elibol et al., 2022) on JAX — GraphArray + LSHS core,
+LM zoo with LSHS-optimized sharding, Pallas TPU kernels, multi-pod launchers.
+
+Subpackages: core, glm, linalg, tensor, models, configs, sharding, train,
+serve, checkpoint, launch, kernels.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Checkpoint/restart (fault tolerance, DESIGN.md §7)."""
+from .ckpt import latest_step, restore, save
+
+__all__ = ["latest_step", "restore", "save"]

@@ -1,0 +1,43 @@
+"""Assigned-architecture configs (+ the paper's own GLM workload).
+
+Each module exports ``CONFIG`` (exact published sizes) — ``--arch <id>``
+selects one.  ``get_config(id)`` / ``list_archs()`` are the programmatic API.
+"""
+from importlib import import_module
+from typing import Dict, List
+
+_ARCHS = [
+    "hymba_1p5b",
+    "gemma_7b",
+    "nemotron_4_15b",
+    "command_r_35b",
+    "gemma3_4b",
+    "qwen3_moe_235b_a22b",
+    "phi3p5_moe_42b_a6p6b",
+    "falcon_mamba_7b",
+    "qwen2_vl_7b",
+    "whisper_small",
+]
+
+ALIASES = {
+    "hymba-1.5b": "hymba_1p5b",
+    "gemma-7b": "gemma_7b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "command-r-35b": "command_r_35b",
+    "gemma3-4b": "gemma3_4b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "phi3.5-moe-42b-a6.6b": "phi3p5_moe_42b_a6p6b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "whisper-small": "whisper_small",
+}
+
+
+def list_archs() -> List[str]:
+    return list(ALIASES.keys())
+
+
+def get_config(arch: str):
+    mod_name = ALIASES.get(arch, arch).replace("-", "_").replace(".", "p")
+    mod = import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG

@@ -1,0 +1,43 @@
+"""NumS core: GraphArray IR + LSHS scheduling (the paper's contribution).
+
+Public API:
+    ArrayContext, ClusterSpec, NodeGrid, ArrayGrid, auto_grid,
+    GraphArray, matmul, tensordot, einsum,
+    LSHS / RoundRobinScheduler / DynamicScheduler, ClusterState, CostModel,
+    bounds (α-β-γ communication model, Appendix A).
+"""
+from .cluster import ClusterState, CostModel, MEM, NET_IN, NET_OUT
+from .context import ArrayContext
+from .executor import Executor
+from .fusion import fuse_graph
+from .graph_array import GraphArray, einsum, matmul, tensordot
+from .grid import ArrayGrid, auto_grid
+from .layout import ClusterSpec, HierarchicalLayout, NodeGrid, default_node_grid
+from .schedulers import DynamicScheduler, LSHS, RoundRobinScheduler, make_scheduler
+from . import bounds
+
+__all__ = [
+    "ArrayContext",
+    "ArrayGrid",
+    "ClusterSpec",
+    "ClusterState",
+    "CostModel",
+    "DynamicScheduler",
+    "Executor",
+    "GraphArray",
+    "HierarchicalLayout",
+    "LSHS",
+    "NodeGrid",
+    "RoundRobinScheduler",
+    "auto_grid",
+    "bounds",
+    "default_node_grid",
+    "einsum",
+    "fuse_graph",
+    "make_scheduler",
+    "matmul",
+    "tensordot",
+    "MEM",
+    "NET_IN",
+    "NET_OUT",
+]

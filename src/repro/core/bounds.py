@@ -1,0 +1,127 @@
+"""Communication lower bounds under the α-β-γ model (paper §7, Appendix A).
+
+All functions return *communication time in seconds* for a dense array of
+size ``N`` elements split into ``p`` worker-level blocks of ``n = N/p``
+elements over ``k`` nodes with ``r = p/k`` workers per node.
+
+Channels:
+  C(n) = α  + β  n   — inter-node transfer
+  D(n) = α″ + β″ n   — Dask intra-node worker->worker transfer (TCP)
+  R(n) = α′ + β′ n   — Ray intra-node shared-memory write ("implicit" cost)
+with α ≫ α″ > α′ and β ≫ β″ > β′, plus γ per dispatched RFC.
+
+On the TPU adaptation, C maps to ICI (β = 1/50 GB/s per link), R maps to an
+HBM round-trip (β′ = 1/819 GB/s) and γ→0 under SPMD (fused program), which is
+recorded as an experimental observation in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class CommModel:
+    alpha: float = 1e-3       # inter-node latency (s)
+    beta: float = 1.0 / 2.5e9  # inter-node inverse bandwidth (s/B): 20 Gbps
+    alpha_d: float = 1e-4     # Dask intra-node latency
+    beta_d: float = 1.0 / 10e9
+    alpha_r: float = 1e-5     # Ray shared-memory latency
+    beta_r: float = 1.0 / 50e9
+    gamma: float = 1e-4       # driver dispatch latency per RFC
+    bytes_per_element: int = 8
+
+    def C(self, n: float) -> float:
+        return self.alpha + self.beta * n * self.bytes_per_element
+
+    def D(self, n: float) -> float:
+        return self.alpha_d + self.beta_d * n * self.bytes_per_element
+
+    def R(self, n: float) -> float:
+        return self.alpha_r + self.beta_r * n * self.bytes_per_element
+
+
+TPU_COMM = CommModel(
+    alpha=1e-6, beta=1.0 / 50e9,      # ICI per link
+    alpha_d=5e-7, beta_d=1.0 / 100e9,
+    alpha_r=2e-7, beta_r=1.0 / 819e9,  # HBM
+    gamma=0.0,                          # SPMD: dispatch compiled away
+)
+
+
+# -- Appendix A bounds (Ray communication time) -------------------------------
+
+def unary_elementwise(m: CommModel, N: float, p: int, k: int) -> float:
+    """A.1: lower bound γp; LSHS incurs ≈ R(n) beyond it (object-store write)."""
+    return m.gamma * p
+
+
+def binary_elementwise(m: CommModel, N: float, p: int, k: int) -> float:
+    """A.1: γp — LSHS achieves 0 inter-node communication."""
+    return m.gamma * p
+
+
+def reduction(m: CommModel, N: float, p: int, k: int) -> float:
+    """A.2: γ(p-1) + log2(r)·R(n) + log2(k)·C(n)."""
+    n = N / p
+    r = max(p // k, 1)
+    return (
+        m.gamma * (p - 1)
+        + math.log2(max(r, 1)) * m.R(n)
+        + math.log2(max(k, 1)) * m.C(n)
+    )
+
+
+def blockwise_inner(m: CommModel, N: float, p: int, k: int) -> float:
+    """A.3: X^T Y row-partitioned: γ(2p-1) + log2(k)C(n) + (1+log2(r))R(n)."""
+    n = N / p
+    r = max(p // k, 1)
+    return (
+        m.gamma * (2 * p - 1)
+        + math.log2(max(k, 1)) * m.C(n)
+        + (1 + math.log2(max(r, 1))) * m.R(n)
+    )
+
+
+def blockwise_outer(m: CommModel, N: float, p: int, k: int) -> float:
+    """A.4: X Y^T with √p row partitions: γp + 2(√k - 1)·r·C(n)."""
+    sp = math.isqrt(p)
+    n = N / sp
+    r = max(p // k, 1)
+    sk = math.sqrt(k)
+    return m.gamma * p + 2.0 * (sk - 1.0) * r * m.C(n)
+
+
+def square_matmul_lshs(m: CommModel, N: float, p: int, k: int) -> float:
+    """A.5: (√k + log√k)·r·C(n) + log(√r)·R(n) (diagonal terms dropped)."""
+    n = N / p
+    r = max(p // k, 1)
+    sk = math.sqrt(k)
+    sr = math.sqrt(max(r, 1))
+    return (sk + math.log2(max(sk, 1.0000001))) * r * m.C(n) + math.log2(max(sr, 1.0000001)) * m.R(n)
+
+
+def square_matmul_summa(m: CommModel, N: float, p: int, k: int) -> float:
+    """A.5.1: SUMMA 2√p·log(√p)·C(n) (all channels treated as inter-node)."""
+    n = N / p
+    sp = math.sqrt(p)
+    return 2.0 * sp * math.log2(max(sp, 1.0000001)) * m.C(n)
+
+
+def summa_internode(m: CommModel, N: float, p: int, k: int) -> float:
+    """SUMMA's inter-node component 2√k·log(√k)·C(n) — the term the paper
+    compares against LSHS's r(√k + log√k)·C(n)."""
+    n = N / p
+    sk = math.sqrt(k)
+    return 2.0 * sk * math.log2(max(sk, 1.0000001)) * m.C(n)
+
+
+BOUNDS = {
+    "unary": unary_elementwise,
+    "binary": binary_elementwise,
+    "sum": reduction,
+    "inner": blockwise_inner,
+    "outer": blockwise_outer,
+    "matmul_lshs": square_matmul_lshs,
+    "matmul_summa": square_matmul_summa,
+}

@@ -1,0 +1,227 @@
+"""Cluster state and the LSHS optimization objective (paper §5.1).
+
+``S`` is a ``k x 3`` matrix tracking per-node loads: memory (column ``MEM``),
+network-in (``NET_IN``) and network-out (``NET_OUT``).  ``M`` maps every
+object id to the set of nodes that hold a (cached) copy, reflecting the
+paper's assumption that a block need only be transmitted to a node once,
+after which it is cached by Ray's object store.
+
+Loads are measured in *array elements* (paper-faithful).  A beyond-paper
+time-normalized objective (seconds, using per-channel bandwidths) is offered
+via ``CostModel`` and is recorded separately in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .layout import ClusterSpec
+
+MEM, NET_IN, NET_OUT = 0, 1, 2
+
+
+@dataclass
+class CostModel:
+    """Unit model for the objective.
+
+    ``paper`` mode reproduces Eq. 2 exactly: loads are element counts and the
+    objective is ``max_j mem + max_j in + max_j out``.
+
+    ``time`` mode (beyond-paper) divides memory load by HBM bandwidth and
+    network load by link bandwidth so heterogeneous channels are
+    commensurable; with intra-node transfers discounted by
+    ``intra_node_coeff`` (the paper's Dask coefficient).
+    """
+
+    mode: str = "paper"  # "paper" | "time"
+    bytes_per_element: int = 8
+    hbm_bw: float = 819e9       # bytes/s  (TPU v5e HBM)
+    link_bw: float = 50e9       # bytes/s  (ICI per link)
+
+    def objective(self, S: np.ndarray) -> float:
+        if self.mode == "paper":
+            return float(S[:, MEM].max() + S[:, NET_IN].max() + S[:, NET_OUT].max())
+        b = self.bytes_per_element
+        return float(
+            S[:, MEM].max() * b / self.hbm_bw
+            + S[:, NET_IN].max() * b / self.link_bw
+            + S[:, NET_OUT].max() * b / self.link_bw
+        )
+
+
+@dataclass
+class TransferRecord:
+    obj: int
+    src: int
+    dst: int
+    elements: int
+    intra_node: bool = False
+
+
+class ClusterState:
+    """Simulated load state of a ``k``-node cluster (paper §5.1).
+
+    ``system="ray"`` uses node-granular residency (shared-memory object store:
+    any worker on a node can read any local object for free).  ``system="dask"``
+    uses worker-granular residency; worker->worker transfers within a node are
+    charged at ``cluster.intra_node_coeff`` times their size (paper footnote 1).
+    """
+
+    def __init__(
+        self,
+        cluster: ClusterSpec,
+        cost_model: Optional[CostModel] = None,
+        system: str = "ray",
+    ):
+        self.cluster = cluster
+        self.system = system
+        self.k = cluster.num_nodes
+        self.S = np.zeros((self.k, 3), dtype=np.float64)
+        # obj -> set of nodes with a cached copy
+        self.M: Dict[int, Set[int]] = {}
+        # obj -> set of (node, worker) with a copy (dask granularity)
+        self.Mw: Dict[int, Set[Tuple[int, int]]] = {}
+        # obj -> (home_node, worker): the placement that produced the object
+        self.home: Dict[int, Tuple[int, int]] = {}
+        self.obj_size: Dict[int, int] = {}
+        self.cost_model = cost_model or CostModel()
+        self.transfers: List[TransferRecord] = []
+        self._worker_rr: List[int] = [0] * self.k
+
+    # -- bookkeeping -------------------------------------------------------
+    def clone(self) -> "ClusterState":
+        c = ClusterState.__new__(ClusterState)
+        c.cluster = self.cluster
+        c.system = self.system
+        c.k = self.k
+        c.S = self.S.copy()
+        c.M = {o: set(n) for o, n in self.M.items()}
+        c.Mw = {o: set(w) for o, w in self.Mw.items()}
+        c.home = dict(self.home)
+        c.obj_size = dict(self.obj_size)
+        c.cost_model = self.cost_model
+        c.transfers = []  # clones are what-if simulations; don't carry history
+        c._worker_rr = list(self._worker_rr)
+        return c
+
+    def add_object(self, obj: int, node: int, worker: int, elements: int) -> None:
+        """Register a freshly created object placed on (node, worker)."""
+        self.M.setdefault(obj, set()).add(node)
+        self.Mw.setdefault(obj, set()).add((node, worker))
+        self.home[obj] = (node, worker)
+        self.obj_size[obj] = int(elements)
+        self.S[node, MEM] += elements
+
+    def nodes_of(self, obj: int) -> Set[int]:
+        return self.M.get(obj, set())
+
+    def pick_worker(self, node: int) -> int:
+        w = self._worker_rr[node] % self.cluster.workers_per_node
+        self._worker_rr[node] += 1
+        return w
+
+    # -- transition function T (paper §5.1) ---------------------------------
+    def transition(
+        self,
+        node: int,
+        out_obj: int,
+        out_elements: int,
+        inputs: Sequence[int],
+        worker: Optional[int] = None,
+    ) -> None:
+        """Simulate executing an op on ``node``: transfer any non-resident
+        inputs (charging net-out at a source and net-in at ``node``), then
+        account the output's memory on ``node``."""
+        if worker is None:
+            worker = self.pick_worker(node)
+        for obj in inputs:
+            holders = self.M.get(obj)
+            if holders is None:
+                raise KeyError(f"unknown object {obj}")
+            if node in holders:
+                if self.system == "dask":
+                    wholders = self.Mw.get(obj, set())
+                    if (node, worker) not in wholders:
+                        # intra-node worker->worker transfer (discounted)
+                        coeff = self.cluster.intra_node_coeff
+                        size = self.obj_size[obj] * coeff
+                        self.S[node, NET_OUT] += size
+                        self.S[node, NET_IN] += size
+                        wholders.add((node, worker))
+                        self.transfers.append(
+                            TransferRecord(obj, node, node, int(size), intra_node=True)
+                        )
+                continue
+            # choose the least net-out-loaded holder as the source
+            src = min(holders, key=lambda h: (self.S[h, NET_OUT], h))
+            size = self.obj_size[obj]
+            self.S[src, NET_OUT] += size
+            self.S[node, NET_IN] += size
+            # §5.1: memory load includes elements *transmitted to* the node
+            self.S[node, MEM] += size
+            holders.add(node)
+            self.Mw.setdefault(obj, set()).add((node, worker))
+            self.transfers.append(TransferRecord(obj, src, node, size))
+        self.add_object(out_obj, node, worker, out_elements)
+
+    def simulate_cost(
+        self,
+        node: int,
+        out_elements: int,
+        inputs: Sequence[int],
+        worker: Optional[int] = None,
+    ) -> float:
+        """Objective value (Eq. 2) after a hypothetical placement on ``node``."""
+        return self.simulate_cost_detail(node, out_elements, inputs, worker)[0]
+
+    def simulate_cost_detail(
+        self,
+        node: int,
+        out_elements: int,
+        inputs: Sequence[int],
+        worker: Optional[int] = None,
+    ) -> Tuple[float, float, float]:
+        """(Eq.2 objective, transfer elements, node load) for a hypothetical
+        placement — the trailing entries are LSHS tie-breakers (the paper
+        leaves ties unspecified; minimizing transferred bytes among
+        equal-objective options is the communication-avoiding choice)."""
+        S = self.S.copy()
+        moved = 0.0
+        for obj in inputs:
+            holders = self.M.get(obj, set())
+            if node in holders:
+                if self.system == "dask" and worker is not None:
+                    if (node, worker) not in self.Mw.get(obj, set()):
+                        size = self.obj_size[obj] * self.cluster.intra_node_coeff
+                        S[node, NET_OUT] += size
+                        S[node, NET_IN] += size
+                        moved += size
+                continue
+            src = min(holders, key=lambda h: (S[h, NET_OUT], h))
+            size = self.obj_size[obj]
+            S[src, NET_OUT] += size
+            S[node, NET_IN] += size
+            S[node, MEM] += size  # §5.1: transmission adds memory at dst
+            moved += size
+        S[node, MEM] += out_elements
+        return self.cost_model.objective(S), moved, float(S[node].sum())
+
+    def objective(self) -> float:
+        return self.cost_model.objective(self.S)
+
+    # -- reporting -----------------------------------------------------------
+    def network_elements(self) -> int:
+        return int(sum(t.elements for t in self.transfers))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "max_mem": float(self.S[:, MEM].max()),
+            "max_net_in": float(self.S[:, NET_IN].max()),
+            "max_net_out": float(self.S[:, NET_OUT].max()),
+            "total_net": float(self.S[:, NET_IN].sum()),
+            "mem_imbalance": float(self.S[:, MEM].max() / max(self.S[:, MEM].mean(), 1e-12)),
+            "objective": self.objective(),
+        }

@@ -1,0 +1,159 @@
+"""ArrayContext: ties grids, layouts, cluster state, scheduler and executor
+together — the user-facing entry point of the NumS reproduction (Fig. 1).
+
+    ctx = ArrayContext(cluster=ClusterSpec(4, 4), node_grid=(2, 2))
+    X = ctx.random((256, 256), grid=(4, 4))
+    Y = ctx.random((256, 256), grid=(4, 4))
+    Z = (X @ Y).compute()        # LSHS-scheduled
+    Z.to_numpy()
+
+Creation operations execute immediately and are placed by the hierarchical
+data layout; numerical expressions are scheduled on ``compute()``.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .cluster import ClusterState, CostModel
+from .executor import Executor
+from .graph_array import GraphArray, Vertex, einsum, leaf, matmul, tensordot
+from .grid import ArrayGrid, auto_grid
+from .layout import ClusterSpec, HierarchicalLayout, NodeGrid
+from .schedulers import SchedulerBase, make_scheduler
+
+
+class ArrayContext:
+    def __init__(
+        self,
+        cluster: ClusterSpec = ClusterSpec(1, 1),
+        node_grid: Optional[Union[NodeGrid, Tuple[int, ...]]] = None,
+        scheduler: Union[str, SchedulerBase] = "lshs",
+        backend: str = "numpy",
+        system: str = "ray",
+        cost_model: Optional[CostModel] = None,
+        seed: int = 0,
+        fuse: bool = False,
+    ):
+        self.cluster = cluster
+        if node_grid is None:
+            node_grid = NodeGrid((cluster.num_nodes,))
+        elif not isinstance(node_grid, NodeGrid):
+            node_grid = NodeGrid(tuple(node_grid))
+        if node_grid.num_nodes != cluster.num_nodes:
+            raise ValueError("node_grid must factor the cluster's node count")
+        self.node_grid = node_grid
+        self.state = ClusterState(cluster, cost_model=cost_model, system=system)
+        self.executor = Executor(mode=backend, seed=seed)
+        self.scheduler = (
+            scheduler
+            if isinstance(scheduler, SchedulerBase)
+            else make_scheduler(scheduler, cluster.num_nodes)
+        )
+        self.rng = random.Random(seed)
+        self._seed = seed
+        self._create_counter = 0
+        self.fuse_enabled = fuse
+
+    # -- creation (eager, §4) -------------------------------------------------
+    def _layout(self, grid: ArrayGrid) -> HierarchicalLayout:
+        return HierarchicalLayout(grid, self.node_grid, self.cluster)
+
+    def _create(
+        self,
+        shape: Sequence[int],
+        grid: Optional[Sequence[int]],
+        kind: str,
+        value: Optional[np.ndarray] = None,
+    ) -> GraphArray:
+        shape = tuple(int(s) for s in shape)
+        if grid is None:
+            agrid = auto_grid(shape, self.cluster.num_workers)
+        else:
+            agrid = ArrayGrid(shape, tuple(int(g) for g in grid))
+        layout = self._layout(agrid)
+        blocks = np.empty(agrid.grid if agrid.grid else (), dtype=object)
+        for idx in agrid.iter_indices():
+            node, worker = layout.placement(idx)
+            bshape = agrid.block_shape(idx)
+            v = leaf(bshape, node, worker)
+            self._create_counter += 1
+            bval = value[agrid.block_slices(idx)] if value is not None else None
+            self.executor.create(
+                v.vid, bshape, (node, worker), kind=kind, value=bval,
+                seed=self._seed * 1_000_003 + self._create_counter,
+            )
+            self.state.add_object(v.vid, node, worker, int(np.prod(bshape)))
+            blocks[idx if agrid.grid else ()] = v
+        return GraphArray(self, agrid, blocks)
+
+    def zeros(self, shape, grid=None) -> GraphArray:
+        return self._create(shape, grid, "zeros")
+
+    def ones(self, shape, grid=None) -> GraphArray:
+        return self._create(shape, grid, "ones")
+
+    def random(self, shape, grid=None) -> GraphArray:
+        return self._create(shape, grid, "random")
+
+    def uniform(self, shape, grid=None) -> GraphArray:
+        return self._create(shape, grid, "uniform")
+
+    def from_numpy(self, arr: np.ndarray, grid=None) -> GraphArray:
+        arr = np.asarray(arr, dtype=np.float64)
+        return self._create(arr.shape, grid, "value", value=arr)
+
+    # -- algebra entry points ---------------------------------------------------
+    matmul = staticmethod(matmul)
+    tensordot = staticmethod(tensordot)
+    einsum = staticmethod(einsum)
+
+    # -- scheduling (LSHS, §5) -----------------------------------------------------
+    def compute(self, ga: GraphArray) -> GraphArray:
+        if ga.is_materialized():
+            return ga
+        if self.fuse_enabled:
+            from .fusion import fuse_graph
+
+            fuse_graph(ga)
+        out_layout = self._layout(ga.grid)
+        roots = []
+        forced: Dict[int, Tuple[int, int]] = {}
+        for idx in ga.grid.iter_indices():
+            v = ga.block(idx)
+            if v.is_leaf():
+                continue
+            roots.append(v)
+            node, worker = out_layout.placement(idx)
+            forced[v.vid] = (node, worker)
+            self._annotate_dest(v, node)
+        self.scheduler.schedule(roots, forced, self.state, self.executor, self.rng)
+        return ga
+
+    @staticmethod
+    def _annotate_dest(root, node: int) -> None:
+        """Tag the subtree with its output's layout node (used by LSHS+'s
+        destination hint; plain LSHS ignores it)."""
+        stack = [root]
+        while stack:
+            v = stack.pop()
+            if v.kind == "leaf" or "dest" in v.meta:
+                continue
+            v.meta["dest"] = node
+            stack.extend(v.children)
+
+    # -- reporting ------------------------------------------------------------------
+    def loads(self) -> Dict[str, float]:
+        d = self.state.summary()
+        d["n_rfc"] = self.executor.stats.n_rfc
+        d["transfers"] = self.state.network_elements()
+        return d
+
+    def reset_loads(self) -> None:
+        """Zero the load counters (keep residency maps) — used between
+        benchmark phases to isolate per-expression loads."""
+        self.state.S[:] = 0.0
+        self.state.transfers.clear()
+        self.executor.stats.reset()

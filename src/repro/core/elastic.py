@@ -1,0 +1,61 @@
+"""Elastic scaling for GraphArrays (DESIGN.md §7).
+
+When the node count changes (scale-up after provisioning, scale-down after a
+failure), every materialized GraphArray is re-laid-out onto the new cluster's
+hierarchical layout.  The transfer schedule is exactly the set of blocks whose
+cyclic placement changed; LSHS continues on the new ClusterState.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .context import ArrayContext
+from .graph_array import GraphArray, leaf
+from .layout import ClusterSpec, HierarchicalLayout, NodeGrid
+
+
+def elastic_relayout(
+    old_ctx: ArrayContext,
+    arrays: list,
+    new_cluster: ClusterSpec,
+    new_node_grid: Optional[Tuple[int, ...]] = None,
+    scheduler: str = "lshs",
+) -> Tuple[ArrayContext, list, int]:
+    """Re-home ``arrays`` (materialized GraphArrays) onto a new cluster.
+
+    Returns ``(new_ctx, new_arrays, blocks_moved)``.  The new context shares
+    the old executor's block storage (object-store survivors move by
+    reference; real systems would transfer bytes — the count is the schedule).
+    """
+    new_ctx = ArrayContext(
+        cluster=new_cluster,
+        node_grid=new_node_grid,
+        scheduler=scheduler,
+        backend=old_ctx.executor.mode,
+        system=old_ctx.state.system,
+        seed=old_ctx._seed,
+    )
+    # share physical storage: the object store outlives the re-plan
+    new_ctx.executor = old_ctx.executor
+    moved = 0
+    new_arrays = []
+    for ga in arrays:
+        if not ga.is_materialized():
+            raise ValueError("elastic_relayout requires materialized arrays")
+        layout = HierarchicalLayout(ga.grid, new_ctx.node_grid, new_cluster)
+        blocks = np.empty(ga.grid.grid if ga.grid.grid else (), dtype=object)
+        for idx in ga.grid.iter_indices():
+            old_v = ga.block(idx)
+            node, worker = layout.placement(idx)
+            v = leaf(old_v.shape, node, worker)
+            new_ctx.executor.alias(v.vid, old_v.vid)
+            new_ctx.state.add_object(v.vid, node, worker, old_v.elements)
+            old_node = old_v.placement[0]
+            if old_node != node or old_node >= new_cluster.num_nodes:
+                moved += 1
+                new_ctx.state.S[node, 1] += old_v.elements  # net-in at new home
+            blocks[idx if ga.grid.grid else ()] = v
+        new_arrays.append(GraphArray(new_ctx, ga.grid, blocks))
+    return new_ctx, new_arrays, moved

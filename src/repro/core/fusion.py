@@ -1,0 +1,69 @@
+"""Operator fusion for GraphArrays (beyond-paper; the paper lists "reducing
+RFC overhead by introducing operator fusion" as future work, §9).
+
+Chains of unary / scalar block ops are collapsed into a single ``fused``
+block-level op, reducing the number of remote function calls (the γ dispatch
+term of §7) by the chain length without changing placement semantics: a fused
+chain has a single operand, hence a single placement option, exactly like the
+unary vertex it replaces.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from .graph_array import GraphArray, Vertex
+
+_FUSABLE = {"neg", "exp", "log", "sqrt", "abs", "square", "sigmoid", "tanh", "identity"}
+
+
+def _chain_step(v: Vertex) -> Tuple:
+    if v.op == "scalar":
+        return ("scalar", v.meta["op"], v.meta["scalar"], bool(v.meta.get("reverse")))
+    return ("unary", v.op)
+
+
+def _fusable(v: Vertex) -> bool:
+    return v.kind == "op" and (v.op in _FUSABLE or v.op == "scalar")
+
+
+def fuse_graph(ga: GraphArray) -> int:
+    """In-place fusion over every block subgraph.  Returns the number of
+    vertices eliminated."""
+    eliminated = 0
+    seen: Dict[int, bool] = {}
+
+    def walk(v: Vertex) -> None:
+        nonlocal eliminated
+        if v.vid in seen:
+            return
+        seen[v.vid] = True
+        # First fuse descendants so chains are maximal.
+        for c in list(v.children):
+            walk(c)
+        if not _fusable(v):
+            return
+        # collapse v's child chain into v (absorbing already-fused children)
+        chain: List[Tuple] = [_chain_step(v)]
+        cur = v.children[0]
+        while len(cur.parents) == 1 and cur.kind == "op" and (_fusable(cur) or cur.op == "fused"):
+            if cur.op == "fused":
+                chain.extend(reversed(cur.meta["chain"]))
+                eliminated += 1
+                cur = cur.children[0]
+                break
+            chain.append(_chain_step(cur))
+            eliminated += 1
+            cur = cur.children[0]
+        if len(chain) == 1:
+            return
+        chain.reverse()  # apply bottom-up
+        v.op = "fused"
+        v.meta = {"chain": chain}
+        old_child = v.children[0]
+        if cur not in v.children:
+            v.children = [cur]
+            cur.parents.append(v)
+
+    for idx in ga.grid.iter_indices():
+        walk(ga.block(idx))
+    return eliminated

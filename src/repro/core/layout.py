@@ -1,0 +1,127 @@
+"""Hierarchical data layout (paper §4, Fig. 4).
+
+Blocks of a logical grid are mapped cyclically to nodes of a user-defined
+*node grid*, then round-robin over the workers within each node:
+
+    A[i, j]  ->  node ℓ = (i % g1) * g2 + j % g2        (2-D rule, Fig. 4)
+
+generalized to n-D by taking ``c_a = i_a % g_a`` for each node-grid axis and
+flattening row-major.  Worker placement within a node is round-robin in
+row-major block order (reproduces Fig. 4a exactly: A[2,3] -> N1 W3).
+
+Along any axis on which two operands share shape+grid, this layout co-locates
+their blocks, so elementwise operations need zero communication, and the
+first level of every reduction tree is node-local.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Sequence, Tuple
+
+import numpy as np
+
+from .grid import ArrayGrid, Index
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """A cluster of ``num_nodes`` nodes with ``workers_per_node`` workers."""
+
+    num_nodes: int
+    workers_per_node: int = 1
+    # relative cost discount of intra-node worker->worker transfers (Dask
+    # footnote in §5.1); Ray's shared-memory store means 0.
+    intra_node_coeff: float = 0.0
+
+    @property
+    def num_workers(self) -> int:
+        return self.num_nodes * self.workers_per_node
+
+
+@dataclass(frozen=True)
+class NodeGrid:
+    """Multi-dimensional coordinate space for nodes (paper §4)."""
+
+    dims: Tuple[int, ...]
+
+    @property
+    def num_nodes(self) -> int:
+        return int(np.prod(self.dims)) if self.dims else 1
+
+    def node_of(self, block_index: Index) -> int:
+        """Cyclic block->node rule, generalized n-D, row-major flattening."""
+        dims = self.dims
+        # match node-grid axes to the *leading* block axes; extra block axes
+        # (beyond the node grid rank) do not affect node placement.
+        coords = []
+        for a, g in enumerate(dims):
+            i = block_index[a] if a < len(block_index) else 0
+            coords.append(i % g)
+        # row-major flatten
+        node = 0
+        for c, g in zip(coords, dims):
+            node = node * g + c
+        return node
+
+
+class HierarchicalLayout:
+    """Assigns (node, worker) to every block of a grid."""
+
+    def __init__(self, grid: ArrayGrid, node_grid: NodeGrid, cluster: ClusterSpec):
+        if node_grid.num_nodes != cluster.num_nodes:
+            raise ValueError(
+                f"node grid {node_grid.dims} has {node_grid.num_nodes} nodes, "
+                f"cluster has {cluster.num_nodes}"
+            )
+        self.grid = grid
+        self.node_grid = node_grid
+        self.cluster = cluster
+        self._placements: Dict[Index, Tuple[int, int]] = {}
+        counters = [0] * cluster.num_nodes
+        for idx in grid.iter_indices():  # row-major order
+            node = node_grid.node_of(idx)
+            worker = counters[node] % cluster.workers_per_node
+            counters[node] += 1
+            self._placements[idx] = (node, worker)
+
+    def placement(self, index: Index) -> Tuple[int, int]:
+        return self._placements[index]
+
+    def node_of(self, index: Index) -> int:
+        return self._placements[index][0]
+
+    def items(self) -> Iterator[Tuple[Index, Tuple[int, int]]]:
+        return iter(self._placements.items())
+
+    def load_per_node(self) -> np.ndarray:
+        """Number of block-elements mapped to each node (for balance checks)."""
+        out = np.zeros(self.cluster.num_nodes, dtype=np.int64)
+        for idx, (node, _w) in self._placements.items():
+            out[node] += self.grid.block_elements(idx)
+        return out
+
+
+def default_node_grid(grid: ArrayGrid, cluster: ClusterSpec) -> NodeGrid:
+    """Factor the node count to (approximately) match the block-grid shape.
+
+    Mirrors the paper's guidance: for row-partitioned (q, 1) grids use
+    (k, 1); for square (g, g) grids use the most square factorization of k.
+    """
+    k = cluster.num_nodes
+    nd = max(grid.ndim, 1)
+    if nd == 1:
+        return NodeGrid((k,))
+    # choose a factorization of k with aspect ratio closest to the grid's
+    best = None
+    target = [g for g in grid.grid] + [1] * (nd - grid.ndim)
+    for g1 in range(1, k + 1):
+        if k % g1:
+            continue
+        g2 = k // g1
+        dims = (g1, g2) + (1,) * (nd - 2)
+        score = 0.0
+        for t, d in zip(target, dims):
+            score += abs(np.log((t + 1e-9) / d))
+        if best is None or score < best[0]:
+            best = (score, dims)
+    return NodeGrid(best[1])

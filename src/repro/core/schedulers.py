@@ -1,0 +1,259 @@
+"""Schedulers: LSHS (paper §5, Alg. 1) and dynamic baselines for the ablation.
+
+LSHS executes a GraphArray by sequentially scheduling *frontier* vertices
+(operation vertices all of whose children are leaves).  A vertex is sampled
+from the frontier; every placement option is simulated against the
+ClusterState; the option minimizing Eq. 2 is chosen; the GraphArray is
+transitioned (Reduce vertices update their remaining operands, op vertices
+become leaves) and the block operation is dispatched to the executor.
+
+The final operation of every output subgraph is forced onto the node given by
+the hierarchical data layout, so every scheduled GraphArray ends up with a
+hierarchical layout (paper §5: "implicitly handled within the transition
+function").
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .cluster import ClusterState
+from .graph_array import Vertex
+
+
+class SchedulerBase:
+    name = "base"
+
+    def schedule(
+        self,
+        roots: Sequence[Vertex],
+        forced: Dict[int, Tuple[int, int]],
+        state: ClusterState,
+        executor,
+        rng: random.Random,
+    ) -> None:
+        frontier: Dict[int, Vertex] = {}
+        visited: Set[int] = set()
+
+        def visit(v: Vertex) -> None:
+            if v.vid in visited:
+                return
+            visited.add(v.vid)
+            for c in v.children:
+                visit(c)
+            if v.kind != "leaf" and v.ready():
+                frontier[v.vid] = v
+
+        for r in roots:
+            visit(r)
+
+        while frontier:
+            vids = sorted(frontier)
+            vid = vids[rng.randrange(len(vids))]
+            v = frontier[vid]
+            if v.kind == "reduce" and len(v.children) > 2:
+                self._reduce_step(v, forced, state, executor, rng)
+                # v stays on the frontier until it collapses to a leaf
+                if v.kind == "leaf":
+                    del frontier[vid]
+                    self._wake_parents(v, frontier)
+                continue
+            del frontier[vid]
+            if v.kind == "reduce":
+                # 1 or 2 children left: the final add IS this vertex's output
+                self._finalize_reduce(v, forced, state, executor, rng)
+            else:
+                self._place_op(v, forced, state, executor, rng)
+            self._wake_parents(v, frontier)
+
+    # -- shared helpers ------------------------------------------------------
+    def _wake_parents(self, v: Vertex, frontier: Dict[int, Vertex]) -> None:
+        for p in v.parents:
+            if p.kind != "leaf" and p.ready():
+                frontier[p.vid] = p
+
+    def _dispatch(
+        self,
+        v: Vertex,
+        node: int,
+        state: ClusterState,
+        executor,
+        worker: Optional[int] = None,
+    ) -> Tuple[int, int]:
+        in_ids = [c.vid for c in v.children]
+        if worker is None:
+            worker = state.pick_worker(node)
+        state.transition(node, v.vid, v.elements, in_ids, worker=worker)
+        executor.run_op(v.vid, v.op, v.meta, in_ids, (node, worker))
+        return node, worker
+
+    def _placement_options(self, v: Vertex, state: ClusterState) -> List[int]:
+        """Paper §4 last ¶: unary-like ops have a single option; binary
+        elementwise on co-located operands collapses to one option; algebra
+        ops offer the union of all nodes on which any operand resides."""
+        homes = [state.home[c.vid][0] for c in v.children]
+        if v.op in ("matmul", "tensordot", "einsum"):
+            opts: Set[int] = set()
+            for c in v.children:
+                opts |= state.nodes_of(c.vid)
+            return sorted(opts)
+        if len(set(homes)) == 1:
+            return [homes[0]]
+        return sorted(set(homes))
+
+    def _choose(
+        self, v: Vertex, options: Sequence[int], state: ClusterState, rng: random.Random
+    ) -> int:
+        raise NotImplementedError
+
+    # -- vertex handlers -------------------------------------------------------
+    def _place_op(self, v, forced, state, executor, rng) -> None:
+        if v.vid in forced:
+            node, worker = forced[v.vid]
+        else:
+            options = self._placement_options(v, state)
+            node = self._choose(v, options, state, rng)
+            worker = None
+        node, worker = self._dispatch(v, node, state, executor, worker)
+        v.to_leaf(node, worker)
+
+    def _pair(self, v: Vertex, rng: random.Random) -> Tuple[Vertex, Vertex]:
+        """Locality pairing (paper §4): same worker first, then same node;
+        cross-node operands are paired FIFO (new partials append to the end of
+        the child list), which yields the balanced tree reduce of §8.4."""
+        by_worker: Dict[Tuple[int, int], List[Vertex]] = {}
+        by_node: Dict[int, List[Vertex]] = {}
+        for c in v.children:
+            by_worker.setdefault(c.placement, []).append(c)
+            by_node.setdefault(c.placement[0], []).append(c)
+        for group in by_worker.values():
+            if len(group) >= 2:
+                return group[0], group[1]
+        for group in by_node.values():
+            if len(group) >= 2:
+                return group[0], group[1]
+        return v.children[0], v.children[1]
+
+    def _reduce_step(self, v, forced, state, executor, rng) -> None:
+        a, b = self._pair(v, rng)
+        tmp = Vertex("op", v.op or "add", a.shape, [a, b])
+        # tmp was appended as a parent of a/b; it replaces them inside v
+        options = sorted(state.nodes_of(a.vid) | state.nodes_of(b.vid))
+        if getattr(self, "dest_hint", False) and "dest" in v.meta:
+            options = sorted(set(options) | {v.meta["dest"]})
+        node = self._choose(tmp, options, state, rng)
+        node, worker = self._dispatch(tmp, node, state, executor)
+        tmp.to_leaf(node, worker)
+        kids = [c for c in v.children if c is not a and c is not b]
+        kids.append(tmp)
+        v.children = kids
+        if len(v.children) == 1:
+            only = v.children[0]
+            # alias: the reduce's output is its single remaining child
+            executor.alias(v.vid, only.vid)
+            state.add_object(v.vid, only.placement[0], only.placement[1], v.elements)
+            v.to_leaf(*only.placement)
+
+    def _finalize_reduce(self, v, forced, state, executor, rng) -> None:
+        if len(v.children) == 1:
+            only = v.children[0]
+            executor.alias(v.vid, only.vid)
+            state.add_object(v.vid, only.placement[0], only.placement[1], v.elements)
+            v.to_leaf(*only.placement)
+            return
+        if v.vid in forced:
+            node, worker = forced[v.vid]
+        else:
+            a, b = v.children
+            options = sorted(state.nodes_of(a.vid) | state.nodes_of(b.vid))
+            node = self._choose(v, options, state, rng)
+            worker = None
+        v.op = v.op or "add"
+        node, worker = self._dispatch(v, node, state, executor, worker)
+        v.to_leaf(node, worker)
+
+
+class LSHS(SchedulerBase):
+    """Load Simulated Hierarchical Scheduling (Alg. 1): greedy argmin of the
+    Eq. 2 objective over the vertex's placement options.
+
+    ``dest_hint=True`` (beyond-paper, "LSHS+") additionally offers each
+    algebra/reduce vertex its output subgraph's final layout node as a
+    placement option, letting the greedy discover output-stationary
+    schedules (SUMMA-like) when they win on cost — see EXPERIMENTS.md §Perf.
+    """
+
+    name = "lshs"
+
+    def __init__(self, dest_hint: bool = False):
+        self.dest_hint = dest_hint
+
+    def _placement_options(self, v, state):
+        opts = super()._placement_options(v, state)
+        if self.dest_hint and "dest" in v.meta and len(opts) > 1:
+            opts = sorted(set(opts) | {v.meta["dest"]})
+        return opts
+
+    def _choose(self, v, options, state, rng):
+        best_node, best_key = None, None
+        in_ids = [c.vid for c in v.children]
+        for node in options:
+            key = state.simulate_cost_detail(node, v.elements, in_ids)
+            if best_key is None or key < best_key:
+                best_key, best_node = key, node
+        return best_node
+
+
+class RoundRobinScheduler(SchedulerBase):
+    """Dask-like baseline: independent tasks round-robin over nodes,
+    locality-blind (placement options are ignored)."""
+
+    name = "roundrobin"
+
+    def __init__(self, k: int):
+        self.k = k
+        self._i = 0
+
+    def _choose(self, v, options, state, rng):
+        node = self._i % self.k
+        self._i += 1
+        return node
+
+    def _placement_options(self, v, state):  # all nodes are fair game
+        return list(range(state.k))
+
+    def _pair(self, v, rng):  # locality-blind pairing (paper §8.1 Dask note)
+        return v.children[0], v.children[1]
+
+
+class DynamicScheduler(SchedulerBase):
+    """Ray-like baseline: place on the node with least memory load,
+    ignoring data locality (bottom-up heuristic, paper §2/§8.5)."""
+
+    name = "dynamic"
+
+    def _choose(self, v, options, state, rng):
+        from .cluster import MEM
+
+        loads = state.S[:, MEM]
+        return int(np.argmin(loads))
+
+    def _placement_options(self, v, state):
+        return list(range(state.k))
+
+    def _pair(self, v, rng):
+        return v.children[0], v.children[1]
+
+
+def make_scheduler(name: str, k: int) -> SchedulerBase:
+    if name == "lshs":
+        return LSHS()
+    if name == "lshs+":
+        return LSHS(dest_hint=True)
+    if name == "roundrobin":
+        return RoundRobinScheduler(k)
+    if name == "dynamic":
+        return DynamicScheduler()
+    raise ValueError(f"unknown scheduler {name!r}")

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+<name>.py holds the pl.pallas_call + BlockSpec kernel; ops.py the jit'd
+public wrappers (interpret=True off-TPU); ref.py the pure-jnp oracles that
+tests/test_kernels.py sweeps against.
+"""
+from . import ops, ref
+from .ops import flash_attention, glm_fused, mamba_scan, matmul
+
+__all__ = ["flash_attention", "glm_fused", "mamba_scan", "matmul", "ops", "ref"]

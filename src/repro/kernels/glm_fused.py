@@ -1,0 +1,46 @@
+"""Fused GLM elementwise kernel (paper §6 hot loop adapted to TPU).
+
+One VMEM pass produces mu = sigmoid(z), the gradient residual c = mu - y and
+the Hessian weights w = mu(1-mu) — the three elementwise arrays every Newton
+iteration needs.  In the GraphArray runtime this corresponds to the fusion
+pass (core/fusion.py) collapsing three block ops into one RFC; on TPU it
+turns three HBM round-trips into one.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _glm_kernel(z_ref, y_ref, mu_ref, c_ref, w_ref):
+    z = z_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    mu = jax.nn.sigmoid(z)
+    mu_ref[...] = mu
+    c_ref[...] = mu - y
+    w_ref[...] = mu * (1.0 - mu)
+
+
+def glm_fused_pallas(z: jax.Array, y: jax.Array, *, bm: int = 1024,
+                     interpret: bool = False):
+    n, d = z.shape
+    bm = min(bm, n)
+    assert n % bm == 0, (n, bm)
+    out = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    return pl.pallas_call(
+        _glm_kernel,
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        ],
+        out_shape=[out, out, out],
+        interpret=interpret,
+    )(z, y)

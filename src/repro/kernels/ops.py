@@ -1,0 +1,99 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Each op pads inputs up to block multiples, dispatches the kernel, and slices
+the result back; ``interpret`` defaults to True off-TPU so the same call
+sites run everywhere (CPU tests exercise the kernel bodies in interpret
+mode; on TPU the compiled kernels run natively).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .glm_fused import glm_fused_pallas
+from .mamba_scan import mamba_scan_pallas
+from .matmul import matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a, b, *, bm: int = 512, bn: int = 1024, bk: int = 512,
+           interpret: Optional[bool] = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    M, K = a.shape
+    _, N = b.shape
+    ap = _pad_to(_pad_to(a, 0, min(bm, 128)), 1, min(bk, 128))
+    bp = _pad_to(_pad_to(b, 0, min(bk, 128)), 1, min(bn, 128))
+    out = matmul_pallas(ap, bp, bm=min(bm, ap.shape[0]), bn=min(bn, bp.shape[1]),
+                        bk=min(bk, ap.shape[1]), interpret=interpret)
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, bq: int = 512, bk: int = 512,
+                    interpret: Optional[bool] = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, H, Sq, hd = q.shape
+    Skv = k.shape[2]
+    bq_ = min(bq, max(Sq, 8))
+    bk_ = min(bk, max(Skv, 8))
+    qp = _pad_to(q, 2, bq_)
+    kp = _pad_to(k, 2, bk_)
+    vp = _pad_to(v, 2, bk_)
+    # padded K positions must never win the softmax: they are masked by the
+    # causal test only if beyond every q; guard non-causal by masking via
+    # window... we instead mask by restricting kv_steps through causal pos
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, window=window, q_offset=q_offset,
+        bq=bq_, bk=bk_, interpret=interpret,
+    )
+    return out[:, :, :Sq, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "chunk", "interpret"))
+def mamba_scan(dA, dBx, C, *, bd: int = 512, chunk: int = 64,
+               interpret: Optional[bool] = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, S, DI, N = dA.shape
+    chunk_ = min(chunk, S)
+    pad_s = (-S) % chunk_
+    dAp = _pad_to(dA, 1, chunk_, value=1.0)   # identity transition in padding
+    dBxp = _pad_to(dBx, 1, chunk_)
+    Cp = _pad_to(C, 1, chunk_)
+    bd_ = min(bd, DI)
+    while DI % bd_:
+        bd_ //= 2
+    out = mamba_scan_pallas(dAp, dBxp, Cp, bd=max(bd_, 1), chunk=chunk_,
+                            interpret=interpret)
+    return out[:, :S]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def glm_fused(z, y, *, bm: int = 1024, interpret: Optional[bool] = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n, d = z.shape
+    bm_ = min(bm, n)
+    while n % bm_:
+        bm_ //= 2
+    zp, yp = z, y
+    mu, c, w = glm_fused_pallas(zp, yp, bm=max(bm_, 1), interpret=interpret)
+    return mu, c, w

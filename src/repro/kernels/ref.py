@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every kernel (the allclose targets of tests/)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    return out.astype(out_dtype or a.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,            # (B, H, Sq, hd)
+    k: jax.Array,            # (B, KV, Skv, hd)
+    v: jax.Array,            # (B, KV, Skv, hd)
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    qg = q.reshape(B, KV, rep, Sq, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkrqd,bksd->bkrqs", qg, k.astype(jnp.float32))
+    scores = scores / math.sqrt(hd)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(k.shape[2])
+    mask = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > (q_pos[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrqs,bksd->bkrqd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def mamba_scan_ref(dA: jax.Array, dBx: jax.Array, C: jax.Array) -> jax.Array:
+    """h_t = dA_t*h_{t-1} + dBx_t;  y_t = h_t . C_t.
+    dA, dBx: (B, S, DI, N); C: (B, S, N) -> y (B, S, DI)."""
+
+    def step(h, inputs):
+        da, dbx, c = inputs
+        h = da * h + dbx
+        return h, jnp.einsum("dn,n->d", h, c)
+
+    def per_batch(da, dbx, c):
+        h0 = jnp.zeros(da.shape[1:], jnp.float32)
+        _, y = jax.lax.scan(step, h0, (da, dbx, c))
+        return y
+
+    return jax.vmap(per_batch)(
+        dA.astype(jnp.float32), dBx.astype(jnp.float32), C.astype(jnp.float32)
+    )
+
+
+def glm_fused_ref(z: jax.Array, y: jax.Array):
+    """mu = sigmoid(z), c = mu - y, w = mu*(1-mu) in one pass (§6)."""
+    mu = jax.nn.sigmoid(z.astype(jnp.float32))
+    return mu, mu - y.astype(jnp.float32), mu * (1.0 - mu)

@@ -1,0 +1,309 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+For each cell: choose a sharding plan with the LSHS plan optimizer, build the
+step function (train_step / prefill / serve_step), lower it AOT against
+ShapeDtypeStruct inputs with explicit in/out shardings, compile, and record
+memory_analysis / cost_analysis / HLO collective bytes into a resumable JSONL
+artifact (EXPERIMENTS.md §Dry-run reads it).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.launch.shapes import (
+    SHAPES,
+    batch_struct,
+    cache_struct,
+    cell_applicable,
+    fit_plan_to_mesh,
+    input_specs,
+    train_state_struct,
+)
+from repro.models.config import ModelConfig
+from repro.sharding.hlo import collective_bytes
+from repro.sharding.optimizer import choose_plan
+from repro.sharding.plans import (
+    Plan,
+    activation_rules,
+    batch_specs,
+    cache_spec_tree,
+    param_sharding_tree,
+)
+from repro.train.optim import AdamConfig
+from repro.train.steps import make_prefill, make_serve_step, make_train_step
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "benchmarks", "artifacts", "dryrun.jsonl")
+
+
+def _prod_axes(mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def _shrink_batch_axes(plan, mesh, B: int):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    kept = []
+    size = 1
+    for a in plan.batch_axes:
+        if B % (size * sizes.get(a, 1)) == 0:
+            kept.append(a)
+            size *= sizes.get(a, 1)
+    return dataclasses.replace(plan, batch_axes=tuple(kept))
+
+
+def _prune_spec(mesh, spec, shape):
+    """Drop spec axes that do not divide the dimension evenly (e.g. batch=1
+    on long_500k cannot shard over data=16)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh_axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    fixed = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            fixed.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        # keep the largest prefix of axes that still divides the dim
+        kept = []
+        size = 1
+        for a in axes:
+            if dim % (size * mesh_axes.get(a, 1)) == 0:
+                kept.append(a)
+                size *= mesh_axes.get(a, 1)
+        if not kept:
+            fixed.append(None)
+        elif len(kept) == 1:
+            fixed.append(kept[0])
+        else:
+            fixed.append(tuple(kept))
+    return NamedSharding(mesh, P(*fixed))
+
+
+def _sharding_tree_for_batch(cfg, plan, mesh, kind, struct):
+    specs = batch_specs(cfg, plan, kind)
+    return {k: _prune_spec(mesh, specs[k], struct[k].shape) for k in struct}
+
+
+def _cache_shardings(cfg, plan, mesh, struct):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec_tree = cache_spec_tree(cfg, plan)
+
+    def pick(path_keys, leaf):
+        node = spec_tree
+        for k in path_keys:
+            node = node.get(k, {}) if isinstance(node, dict) else {}
+        spec = node if isinstance(node, P) else P()
+        # drop axes that do not divide the dim evenly
+        mesh_axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        fixed = []
+        for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * (len(leaf.shape) - len(spec))):
+            if entry is None:
+                fixed.append(None)
+                continue
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            size = 1
+            for a in axes:
+                size *= mesh_axes.get(a, 1)
+            fixed.append(entry if dim % size == 0 else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    out = {"layers": {}, "pos": NamedSharding(mesh, P())}
+    for k, leaf in struct["layers"].items():
+        out["layers"][k] = pick(("layers", k), leaf)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             plan_override: Optional[Plan] = None,
+             plan_mode: str = "time", variant: str = "baseline") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    info = SHAPES[shape_name]
+    kind, S, B = info["kind"], info["seq"], info["batch"]
+    ok, why = cell_applicable(cfg, shape_name)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "seq": S, "batch": B, "variant": variant,
+    }
+    if not ok:
+        rec.update({"status": "skipped", "reason": why})
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_axes = mesh_axis_sizes(mesh)
+
+    if plan_override is not None:
+        plan = fit_plan_to_mesh(plan_override, mesh)
+        ranking = []
+    else:
+        choice = choose_plan(cfg, mesh_axes, kind, B, S, mode=plan_mode)
+        plan = fit_plan_to_mesh(choice.plan, mesh)
+        ranking = choice.ranking[:4]
+    if B < _prod_axes(mesh, plan.batch_axes):
+        # batch too small for the full DP extent: shrink the plan's batch axes
+        plan = _shrink_batch_axes(plan, mesh, B)
+    rules = activation_rules(plan, mesh, cfg)
+    rec["plan"] = plan.describe()
+    rec["plan_ranking"] = ranking
+
+    p_shardings = param_sharding_tree(cfg, plan, mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    repl = NamedSharding(mesh, P())
+
+    if kind == "train":
+        state = train_state_struct(cfg)
+        batch = batch_struct(cfg, kind, B, S)
+        state_sh = {
+            "params": p_shardings,
+            "opt": {"m": p_shardings, "v": p_shardings, "step": repl},
+        }
+        batch_sh = _sharding_tree_for_batch(cfg, plan, mesh, kind, batch)
+        step = make_train_step(cfg, plan, AdamConfig(), rules)
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+        args = (state, batch)
+    elif kind == "prefill":
+        params = input_specs(arch, shape_name)["params"]
+        batch = batch_struct(cfg, kind, B, S)
+        batch_sh = _sharding_tree_for_batch(cfg, plan, mesh, kind, batch)
+        fn = make_prefill(cfg, plan, max_len=S, rules=rules)
+        jitted = jax.jit(fn, in_shardings=(p_shardings, batch_sh))
+        args = (params, batch)
+    else:  # decode / long
+        spec = input_specs(arch, shape_name)
+        params, tokens, cache = spec["params"], spec["tokens"], spec["cache"]
+        cache_sh = _cache_shardings(cfg, plan, mesh, cache)
+        tok_sh = _prune_spec(mesh, P(plan.batch_axes), tokens.shape)
+        fn = make_serve_step(cfg, plan, rules)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_shardings, tok_sh, cache_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(2,),
+        )
+        args = (params, tokens, cache)
+
+    with mesh:
+        lowered = jitted.lower(*args)
+        coll_low = collective_bytes(lowered.as_text())
+        compiled = lowered.compile()
+
+    rec["compile_s"] = round(time.time() - t0, 1)
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(ma, "peak_memory_in_bytes", None),
+        }
+    except Exception as ex:  # CPU backend may not support it
+        rec["memory"] = {"error": str(ex)}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost"] = {
+            "flops": ca.get("flops"),
+            "bytes_accessed": ca.get("bytes accessed"),
+            "transcendentals": ca.get("transcendentals"),
+        }
+    except Exception as ex:
+        rec["cost"] = {"error": str(ex)}
+    try:
+        txt = compiled.as_text()
+        rec["collectives"] = collective_bytes(txt, loop_aware=True)
+        rec["collectives_flat"] = collective_bytes(txt, loop_aware=False)
+    except Exception:
+        rec["collectives"] = coll_low
+    rec["status"] = "ok"
+    return rec
+
+
+def append_record(rec: Dict[str, Any], path: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+def existing_cells(path: str):
+    done = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except Exception:
+                    pass
+    return done
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--artifact", default=os.path.abspath(ARTIFACT))
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    done = set() if args.force else existing_cells(args.artifact)
+
+    for multi_pod in meshes:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        for arch in archs:
+            for shape in shapes:
+                if (arch, shape, mesh_name) in done:
+                    print(f"[skip-done] {arch} {shape} {mesh_name}")
+                    continue
+                print(f"[dryrun] {arch} {shape} {mesh_name} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi_pod)
+                except Exception as ex:
+                    rec = {
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "status": "error", "error": f"{type(ex).__name__}: {ex}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                append_record(rec, args.artifact)
+                status = rec.get("status")
+                extra = rec.get("reason") or rec.get("error") or ""
+                print(f"  -> {status} {extra} "
+                      f"({rec.get('compile_s', '?')}s, plan={rec.get('plan', '-')})",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

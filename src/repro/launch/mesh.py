@@ -1,0 +1,28 @@
+"""Production mesh construction (multi-pod dry-run spec).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state.  Single pod: (16, 16) = 256 chips on
+("data", "model"); multi-pod: (2, 16, 16) = 512 chips on
+("pod", "data", "model") — the leading "pod" axis crosses the slower
+inter-pod links, mirroring the paper's node/worker bandwidth hierarchy.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Degenerate mesh over whatever devices exist (tests / CPU runs)."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

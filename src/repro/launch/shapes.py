@@ -1,0 +1,110 @@
+"""Assigned input shapes and per-cell input_specs (ShapeDtypeStruct stand-ins:
+weak-type-correct, shardable, no device allocation)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.config import ModelConfig
+from repro.models.transformer import _make_caches, param_struct
+from repro.sharding.plans import Plan
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "long", "seq": 524288, "batch": 1},
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k skipped (DESIGN.md)"
+    return True, ""
+
+
+def fit_plan_to_mesh(plan: Plan, mesh) -> Plan:
+    """Drop mesh axes the plan references but the mesh lacks (e.g. 'pod' on
+    the single-pod mesh)."""
+    names = set(mesh.axis_names)
+    batch_axes = tuple(a for a in plan.batch_axes if a in names)
+    kw = {"batch_axes": batch_axes}
+    if plan.tp_axis and plan.tp_axis not in names:
+        kw["tp_axis"] = None
+    f = plan.fsdp_axis
+    if isinstance(f, str) and f not in names:
+        kw["fsdp_axis"] = None
+    elif isinstance(f, tuple):
+        kept = tuple(a for a in f if a in names)
+        kw["fsdp_axis"] = kept if kept else None
+    return dataclasses.replace(plan, **kw)
+
+
+def batch_struct(cfg: ModelConfig, kind: str, B: int, S: int) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    batch: Dict[str, Any] = {}
+    if cfg.embed_inputs and not cfg.encdec:
+        batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.encdec:
+        batch["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_max_len, cfg.d_model), dt)
+    if kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return batch
+
+
+def cache_struct(cfg: ModelConfig, B: int, max_len: int) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    per = jax.eval_shape(lambda: _make_caches(cfg, B, max_len, dt))
+    if cfg.encdec:
+        KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        per = dict(per)
+        per["ck"] = jax.ShapeDtypeStruct(
+            (cfg.n_layers, B, cfg.enc_max_len, KV, hd), dt)
+        per["cv"] = jax.ShapeDtypeStruct(
+            (cfg.n_layers, B, cfg.enc_max_len, KV, hd), dt)
+    return {"layers": per, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def train_state_struct(cfg: ModelConfig) -> Dict[str, Any]:
+    p = param_struct(cfg, dtype="float32")
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {
+        "params": p,
+        "opt": {
+            "m": jax.tree.map(f32, p),
+            "v": jax.tree.map(f32, p),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        },
+    }
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, Any]:
+    """All ShapeDtypeStructs needed to lower the cell's step function."""
+    cfg = get_config(arch)
+    info = SHAPES[shape_name]
+    kind, S, B = info["kind"], info["seq"], info["batch"]
+    if kind == "train":
+        return {
+            "kind": kind,
+            "state": train_state_struct(cfg),
+            "batch": batch_struct(cfg, kind, B, S),
+        }
+    if kind == "prefill":
+        return {
+            "kind": kind,
+            "params": param_struct(cfg),
+            "batch": batch_struct(cfg, kind, B, S),
+        }
+    # decode / long: one new token against a seq_len cache
+    return {
+        "kind": kind,
+        "params": param_struct(cfg),
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": cache_struct(cfg, B, S),
+    }

@@ -1,0 +1,125 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-4b --reduced \
+        --steps 200 --batch 8 --seq 64 --ckpt-dir /tmp/run1
+
+Features exercised here (and by examples/train_lm.py): LSHS-chosen sharding
+plan over the host mesh, deterministic data pipeline, AdamW + warmup-cosine,
+checkpoint/restart (auto-resume from the latest step, exact data-cursor
+replay), periodic eval, and crash-safe atomic checkpoint publication.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore, save
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh, mesh_axis_sizes
+from repro.sharding.optimizer import choose_plan
+from repro.sharding.plans import Plan, activation_rules
+from repro.train import (
+    AdamConfig,
+    DataConfig,
+    TokenPipeline,
+    init_train_state,
+    make_train_step,
+)
+from repro.launch.shapes import fit_plan_to_mesh
+
+
+def train_loop(
+    arch: str,
+    steps: int = 100,
+    batch: int = 8,
+    seq: int = 64,
+    reduced: bool = True,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 50,
+    lr: float = 1e-2,
+    log_every: int = 10,
+    seed: int = 0,
+    corpus: str = "pattern",
+    plan: Optional[Plan] = None,
+    schedule_steps: Optional[int] = None,
+    log_fn=print,
+):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    if plan is None:
+        choice = choose_plan(cfg, mesh_axis_sizes(mesh), "train", batch, seq)
+        plan = choice.plan
+    plan = fit_plan_to_mesh(plan, mesh)
+    if batch % max(np.prod([mesh_axis_sizes(mesh).get(a, 1) for a in plan.batch_axes]), 1):
+        plan = dataclasses.replace(plan, batch_axes=())
+    rules = activation_rules(plan, mesh, cfg) if len(jax.devices()) > 1 else None
+
+    sched = schedule_steps or steps
+    opt_cfg = AdamConfig(lr=lr, warmup_steps=max(sched // 20, 5), total_steps=sched)
+    step_fn = jax.jit(make_train_step(cfg, plan, opt_cfg, rules))
+
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch,
+                          corpus=corpus, seed=seed)
+
+    start_step = 0
+    state = None
+    pipe = TokenPipeline(data_cfg)
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        raw, meta = restore(ckpt_dir)
+        state = jax.tree.map(jnp.asarray, raw)
+        start_step = int(meta["step"])
+        pipe = TokenPipeline.restore(data_cfg, meta["data"])
+        log_fn(f"[resume] step {start_step} from {ckpt_dir}")
+    if state is None:
+        state = init_train_state(cfg, jax.random.PRNGKey(seed))
+
+    history = []
+    t0 = time.time()
+    for step in range(start_step, steps):
+        batch_np = next(pipe)
+        state, metrics = step_fn(state, {k: jnp.asarray(v) for k, v in batch_np.items()})
+        loss = float(metrics["loss"])
+        history.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            tok_s = (batch * seq * (step - start_step + 1)) / max(time.time() - t0, 1e-9)
+            log_fn(f"[step {step:5d}] loss={loss:.4f} "
+                   f"gnorm={float(metrics['grad_norm']):.3f} "
+                   f"lr={float(metrics['lr']):.2e} tok/s={tok_s:,.0f}")
+        if ckpt_dir and ((step + 1) % ckpt_every == 0 or step == steps - 1):
+            save(ckpt_dir, step + 1, state, meta={"data": pipe.state(),
+                                                  "arch": arch, "loss": loss})
+    return state, history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full", action="store_true", help="full (not reduced) config")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--corpus", default="pattern", choices=["pattern", "random"])
+    args = ap.parse_args()
+    train_loop(
+        args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+        reduced=not args.full, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, lr=args.lr, seed=args.seed,
+        corpus=args.corpus,
+    )
+
+
+if __name__ == "__main__":
+    main()

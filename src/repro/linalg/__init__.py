@@ -1,0 +1,5 @@
+"""Distributed linear algebra on GraphArray (paper §8.2-8.3, Appendix A)."""
+from .qr import tsqr_direct, tsqr_indirect
+from .matmul import recursive_matmul, summa_matmul
+
+__all__ = ["recursive_matmul", "summa_matmul", "tsqr_direct", "tsqr_indirect"]

@@ -1,0 +1,26 @@
+"""LM model zoo: unified transformer/MoE/SSM/hybrid/enc-dec models."""
+from .config import ModelConfig, MoEConfig, SSMConfig
+from .partitioning import Rules, constrain, use_rules
+from .transformer import (
+    decode_step,
+    forward,
+    init_params,
+    param_shapes,
+    param_struct,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "Rules",
+    "SSMConfig",
+    "constrain",
+    "decode_step",
+    "forward",
+    "init_params",
+    "param_shapes",
+    "param_struct",
+    "prefill",
+    "use_rules",
+]

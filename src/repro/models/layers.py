@@ -1,0 +1,252 @@
+"""Transformer building blocks: norms, RoPE/M-RoPE, GQA attention (causal,
+sliding-window, cross), MLP variants, logit soft-capping.
+
+All functions are pure; parameters are plain dicts of jnp arrays.  Activations
+carry logical-axis sharding constraints (see partitioning.py).  Softmax and
+norm statistics are computed in float32 regardless of the compute dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .partitioning import constrain
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(dtype)
+
+
+def apply_norm(x, params, kind: str, eps: float):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"], eps)
+    return layernorm(x, params["scale"], params["bias"], eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE and M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float, sections: Tuple[int, ...]
+) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): positions (3, B, S) — temporal/height/width
+    streams rotate disjoint frequency bands of each head."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, "mrope sections must sum to head_dim/2"
+    freqs = _rope_freqs(hd, theta)                      # (half,)
+    # pick the position stream per frequency band
+    band = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half)
+    pos = positions.astype(jnp.float32)                 # (3,B,S)
+    pos_per_freq = pos[band, :, :]                      # (half,B,S)
+    ang = jnp.transpose(pos_per_freq, (1, 2, 0)) * freqs  # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def position_embed(x, positions, cfg):
+    if cfg.rope == "none" or positions is None:
+        return x
+    if cfg.rope == "mrope":
+        if positions.ndim == 2:  # text-only: broadcast to 3 identical streams
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def make_causal_mask(q_len: int, kv_len: int, window: Optional[int] = None,
+                     q_offset: int = 0) -> jax.Array:
+    """(q_len, kv_len) boolean mask; True = attend.  ``window`` bounds the
+    lookback (sliding-window attention)."""
+    q_pos = jnp.arange(q_len) + q_offset
+    k_pos = jnp.arange(kv_len)
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > (q_pos[:, None] - window)
+    return mask
+
+
+ATTN_CHUNK = 1024   # q-chunk size above which chunked attention kicks in
+ATTN_CHUNK_MIN_SQ = 2048
+
+
+def _attention_dense(qg, k, v, mask, softcap, hd):
+    scores = jnp.einsum("bqkrd,bskd->bkrqs", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(qg.dtype)
+    return jnp.einsum("bkrqs,bskd->bqkrd", probs, v)
+
+
+def attention_scores(
+    q: jax.Array,           # (B, Sq, H, hd)
+    k: jax.Array,           # (B, Skv, KV, hd)
+    v: jax.Array,           # (B, Skv, KV, hd)
+    mask: Optional[jax.Array],  # broadcastable to (B, H, Sq, Skv)
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Reference grouped-query attention.  Long query lengths are processed
+    in q-chunks under ``jax.checkpoint`` (flash-attention-like memory: the
+    full (Sq, Skv) score matrix is never resident).  The Pallas flash kernel
+    (repro.kernels.flash_attention) implements the same contract for the TPU
+    hot path; this jnp path is the dry-run/compile target and the oracle."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Sq, KV, rep, hd)
+    # normalize mask to (B?, 1?, 1?, Sq, Skv)-broadcastable 5-D
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None, None]
+        elif mask.ndim == 3:  # (B, Sq, Skv)
+            mask = mask[:, None, None]
+    if Sq < ATTN_CHUNK_MIN_SQ or Sq % ATTN_CHUNK:
+        out = _attention_dense(qg, k, v, mask, softcap, hd)
+        return out.reshape(B, Sq, H, hd)
+
+    nchunk = Sq // ATTN_CHUNK
+
+    @jax.checkpoint
+    def chunk_fn(carry, idx):
+        q0 = idx * ATTN_CHUNK
+        qc = jax.lax.dynamic_slice_in_dim(qg, q0, ATTN_CHUNK, axis=1)
+        mc = None
+        if mask is not None:
+            mc = jax.lax.dynamic_slice_in_dim(mask, q0, ATTN_CHUNK, axis=3) \
+                if mask.shape[3] == Sq else mask
+        oc = _attention_dense(qc, k, v, mc, softcap, hd)
+        return carry, oc
+
+    _, chunks = jax.lax.scan(chunk_fn, 0, jnp.arange(nchunk))
+    # chunks: (nchunk, B, ATTN_CHUNK, KV, rep, hd)
+    out = jnp.moveaxis(chunks, 0, 1).reshape(B, Sq, KV, rep, hd)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention_block(
+    params: Dict,
+    x: jax.Array,                 # (B, S, D)
+    cfg,
+    positions: jax.Array,
+    mask: Optional[jax.Array],
+    cache: Optional[Dict] = None,  # {"k","v": (B, S_max, KV, hd), "pos": int32}
+    kv_x: Optional[jax.Array] = None,  # cross-attention source (enc output)
+    cross: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(B, S, H, hd)
+    if cross and kv_x is None:
+        # decode: reuse the static cross KV computed at prefill
+        if cfg.attn_bias:
+            q = q + params["bq"].reshape(1, 1, H, hd)
+        if cfg.qk_norm:
+            q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        out = attention_scores(q, cache["k"], cache["v"], mask, cfg.logit_softcap)
+        out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), params["wo"])
+        return constrain(out, "batch", "seq", "embed"), None
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dh->bsh", src, params["wk"]).reshape(B, src.shape[1], KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", src, params["wv"]).reshape(B, src.shape[1], KV, hd)
+    if cfg.attn_bias:
+        q = q + params["bq"].reshape(1, 1, H, hd)
+        k = k + params["bk"].reshape(1, 1, KV, hd)
+        v = v + params["bv"].reshape(1, 1, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    if not cross:  # self-attention gets positional rotation
+        q = position_embed(q, positions, cfg)
+        k = position_embed(k, positions, cfg)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    new_cache = None
+    if cache is not None and not cross:
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, pos, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": pos + S}
+        k, v = ck, cv
+    out = attention_scores(q, k, v, mask, cfg.logit_softcap)
+    out = constrain(out, "batch", "seq", "heads", None)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), params["wo"])
+    return constrain(out, "batch", "seq", "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+_ACT = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def mlp_block(params: Dict, x: jax.Array, cfg) -> jax.Array:
+    act = _ACT[cfg.act]
+    if cfg.gated_mlp:
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+        h = act(g) * u
+    else:
+        h = act(jnp.einsum("bsd,df->bsf", x, params["w_up"]))
+    h = constrain(h, "batch", "seq", "ff")
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+    return constrain(out, "batch", "seq", "embed")
+
+
+def softcap_logits(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return logits
+    return jnp.tanh(logits / cap) * cap

@@ -1,0 +1,127 @@
+"""Mixture-of-Experts layer (GShard/Switch-style, grouped dispatch).
+
+TPU-native formulation: tokens are processed in *groups* (GShard's G axis) so
+the dispatch/combine tensors stay O(S_g * E * C) with per-group capacity
+C = ceil(top_k * S_g / E * capacity_factor).  Two dispatch modes:
+
+  * "einsum"  — classic dense one-hot dispatch/combine einsums (GShard);
+                costs ~2*E*C*D extra FLOPs per token.
+  * "gather"  — FLOP-free routing via gathers on precomputed slot indices
+                (beyond-paper optimization, see EXPERIMENTS.md §Perf).
+
+Expert parallelism shards the leading E dimension of the expert weights
+(logical axis "experts"); the dispatched activations (E, G*C, D) carry the
+same axis, so dispatch/combine lower to all-to-alls on the mesh.  The router
+runs in float32 and an auxiliary load-balancing loss (Switch eq. 4) is
+returned for the training objective.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _ACT
+from .partitioning import constrain
+
+_GROUP_TOKENS = 2048  # target tokens per dispatch group
+
+
+def _expert_mlp(params: Dict, xin: jax.Array, cfg) -> jax.Array:
+    """Batched expert MLP over stacked weights; xin: (E, C_total, D)."""
+    act = _ACT[cfg.act]
+    if cfg.gated_mlp:
+        g = jnp.einsum("ecd,edf->ecf", xin, params["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", xin, params["w_up"])
+        h = act(g) * u
+    else:
+        h = act(jnp.einsum("ecd,edf->ecf", xin, params["w_up"]))
+    h = constrain(h, "experts", None, "ff")
+    out_e = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    return constrain(out_e, "experts", None, "embed")
+
+
+def moe_block(
+    params: Dict,
+    x: jax.Array,          # (B, S, D)
+    cfg,
+    capacity_factor: float = 1.25,
+    dispatch_mode: str = "einsum",
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux_loss scalar)."""
+    e = cfg.moe
+    B, S, D = x.shape
+    E, K = e.num_experts, e.top_k
+    N = B * S
+    # group tokens: G groups of Sg tokens (Sg divides N by construction)
+    Sg = min(_GROUP_TOKENS, N)
+    while N % Sg:
+        Sg //= 2
+    Sg = max(Sg, 1)
+    G = N // Sg
+    xg = x.reshape(G, Sg, D)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                       # (G, Sg, E)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                 # (G, Sg, K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss over the whole batch
+    me = probs.mean(axis=(0, 1))                                  # (E,)
+    top1 = jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32)
+    ce = top1.mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce) * e.load_balance_coef
+
+    C = max(1, int(math.ceil(K * Sg / E * capacity_factor)))
+
+    # position of each (token, k) within its expert's per-group capacity
+    sel = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)            # (G, Sg, K, E)
+    flat = sel.reshape(G, Sg * K, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(G, Sg, K, E)
+    pos = jnp.sum(pos_in_expert * sel, axis=-1)                   # (G, Sg, K)
+    fits = pos < C
+
+    if dispatch_mode == "gather":
+        # FLOP-free routing: scatter slot->token index, then gather.
+        slot = jnp.where(fits, gate_idx * C + pos, E * C)         # (G, Sg, K)
+        tok_ids = jnp.broadcast_to(
+            jnp.arange(Sg, dtype=jnp.int32)[None, :, None], (G, Sg, K)
+        )
+        token_of_slot = jnp.full((G, E * C + 1), Sg, dtype=jnp.int32)
+        token_of_slot = jax.vmap(lambda t, s, i: t.at[s.reshape(-1)].set(i.reshape(-1)))(
+            token_of_slot, slot, tok_ids
+        )
+        xg_pad = jnp.concatenate([xg, jnp.zeros((G, 1, D), xg.dtype)], axis=1)
+        xin = jnp.take_along_axis(
+            xg_pad, token_of_slot[..., None][:, :-1], axis=1
+        )                                                         # (G, E*C, D)
+        xin = xin.reshape(G, E, C, D).swapaxes(0, 1).reshape(E, G * C, D)
+        xin = constrain(xin, "experts", None, "embed")
+        out_e = _expert_mlp(params, xin, cfg)
+        out_slots = out_e.reshape(E, G, C, D).swapaxes(0, 1).reshape(G, E * C, D)
+        out_pad = jnp.concatenate([out_slots, jnp.zeros((G, 1, D), out_e.dtype)],
+                                  axis=1)
+        gathered = jnp.take_along_axis(
+            out_pad, slot.reshape(G, Sg * K)[..., None], axis=1
+        ).reshape(G, Sg, K, D)
+        out = jnp.sum(gathered * gate_vals[..., None].astype(x.dtype), axis=2)
+    else:
+        sel_f = sel.astype(jnp.float32) * fits[..., None]         # (G,Sg,K,E)
+        pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32)        # (G,Sg,K,C)
+        dispatch = jnp.einsum("gske,gskc->gsec", sel_f, pos_oh)
+        combine = jnp.einsum("gske,gskc,gsk->gsec", sel_f, pos_oh, gate_vals)
+        # NOTE: constraining dispatch/combine onto the experts axis was tried
+        # (§Perf qwen3 it.5): -18% collective bytes but +27% temp memory —
+        # reverted because HBM is the binding constraint for MoE cells.
+        xin = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), xg)
+        xin = xin.reshape(E, G * C, D)
+        xin = constrain(xin, "experts", None, "embed")
+        out_e = _expert_mlp(params, xin, cfg).reshape(E, G, C, D)
+        out = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), out_e)
+
+    out = out.reshape(B, S, D)
+    return constrain(out, "batch", "seq", "embed"), aux

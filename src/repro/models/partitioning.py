@@ -1,0 +1,80 @@
+"""Logical-axis sharding rules (t5x-style), the knob LSHS turns.
+
+Model code annotates activations with *logical* axis names
+(``constrain(x, "batch", "seq", "embed")``).  A :class:`Rules` object maps
+logical names to mesh axes (or None).  The LSHS sharding optimizer
+(``repro.sharding``) selects among candidate Rules; the launcher installs the
+winner.  Outside an active rules scope every annotation is a no-op, so smoke
+tests on one CPU device run the exact same model code.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass
+class Rules:
+    mesh: Mesh
+    table: Dict[str, AxisVal] = field(default_factory=dict)
+
+    def spec(self, *names: Optional[str]) -> P:
+        axes = []
+        used = set()
+        for n in names:
+            v = self.table.get(n) if n is not None else None
+            if v is None:
+                axes.append(None)
+                continue
+            vt = (v,) if isinstance(v, str) else tuple(v)
+            vt = tuple(a for a in vt if a not in used)
+            used.update(vt)
+            if not vt:
+                axes.append(None)
+            elif len(vt) == 1:
+                axes.append(vt[0])
+            else:
+                axes.append(vt)
+        return P(*axes)
+
+    def sharding(self, *names: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*names))
+
+
+_TLS = threading.local()
+
+
+def set_rules(rules: Optional[Rules]) -> None:
+    _TLS.rules = rules
+
+
+def get_rules() -> Optional[Rules]:
+    return getattr(_TLS, "rules", None)
+
+
+class use_rules:
+    def __init__(self, rules: Optional[Rules]):
+        self.rules = rules
+
+    def __enter__(self):
+        self.prev = get_rules()
+        set_rules(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        set_rules(self.prev)
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical axis names (no-op when no
+    rules are active)."""
+    rules = get_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(*names))

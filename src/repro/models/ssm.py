@@ -1,0 +1,97 @@
+"""Mamba-1 selective state-space block (falcon-mamba, hymba's SSM branch).
+
+Training/prefill uses ``jax.lax.associative_scan`` over time (parallel prefix
+on the linear recurrence h_t = dA_t * h_{t-1} + dBx_t), which is the
+TPU-friendly adaptation of the CUDA selective-scan kernel; the Pallas
+chunked-scan kernel (repro.kernels.mamba_scan) covers the hot path on real
+hardware with identical semantics.  Decode carries (conv_state, ssm_state)
+and does O(1) work per token.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .partitioning import constrain
+
+
+def ssm_scan(dA: jax.Array, dBx: jax.Array) -> jax.Array:
+    """h_t = dA_t * h_{t-1} + dBx_t along axis 1 (seq).  Shapes (B,S,DI,N)."""
+
+    def combine(a, b):
+        a_l, b_l = a
+        a_r, b_r = b
+        return a_l * a_r, b_l * a_r + b_r
+
+    _, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    return h
+
+
+def _ssm_core(params, xz, cfg, conv_state=None, ssm_state=None):
+    """xz: (B, S, 2*DI) projected input.  Returns (y, new_conv, new_ssm)."""
+    s = cfg.ssm
+    B, S, _ = xz.shape
+    DI = s.d_inner(cfg.d_model)
+    N = s.d_state
+    R = s.resolved_dt_rank(cfg.d_model)
+    x, z = jnp.split(xz, 2, axis=-1)                      # (B,S,DI) each
+
+    # depthwise causal conv along seq (kernel d_conv)
+    w = params["conv_w"]                                  # (d_conv, DI)
+    if conv_state is not None:
+        xc = jnp.concatenate([conv_state, x], axis=1)     # (B, d_conv-1+S, DI)
+    else:
+        xc = jnp.pad(x, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+    new_conv = xc[:, -(s.d_conv - 1):, :] if s.d_conv > 1 else xc[:, :0, :]
+    x = sum(
+        xc[:, i : i + S, :] * w[i][None, None, :] for i in range(s.d_conv)
+    ) + params["conv_b"][None, None, :]
+    x = jax.nn.silu(x)
+
+    # input-dependent (selective) parameters
+    proj = jnp.einsum("bsd,dr->bsr", x, params["x_proj"])  # (B,S,R+2N)
+    dt, Bm, Cm = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt, params["dt_proj"]) + params["dt_bias"]
+    )                                                      # (B,S,DI)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))      # (DI, N)
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A[None, None])  # (B,S,DI,N)
+    dBx = (
+        dt[..., None]
+        * Bm[:, :, None, :]
+        * x[..., None]
+    ).astype(jnp.float32)                                  # (B,S,DI,N)
+
+    if ssm_state is not None and S == 1:
+        h = dA * ssm_state[:, None] + dBx                  # (B,1,DI,N)
+        new_ssm = h[:, 0]
+    else:
+        if ssm_state is not None:  # continue a scan from carried state
+            dBx = dBx.at[:, 0].add(dA[:, 0] * ssm_state)
+        h = ssm_scan(dA, dBx)                              # (B,S,DI,N)
+        new_ssm = h[:, -1]
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cm.astype(jnp.float32)).astype(x.dtype)
+    y = y + params["D"][None, None, :] * x
+    y = y * jax.nn.silu(z)
+    return y, new_conv, new_ssm
+
+
+def ssm_block(
+    params: Dict,
+    x: jax.Array,                 # (B, S, D)
+    cfg,
+    cache: Optional[Dict] = None,  # {"conv": (B,d_conv-1,DI), "ssm": (B,DI,N)}
+) -> Tuple[jax.Array, Optional[Dict]]:
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xz = constrain(xz, "batch", "seq", "ff")
+    conv_state = cache["conv"] if cache is not None else None
+    ssm_state = cache["ssm"] if cache is not None else None
+    y, new_conv, new_ssm = _ssm_core(params, xz, cfg, conv_state, ssm_state)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    out = constrain(out, "batch", "seq", "embed")
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": new_ssm}
+    return out, new_cache

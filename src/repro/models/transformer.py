@@ -1,0 +1,446 @@
+"""Unified LM: decoder-only (dense/MoE/SSM/hybrid) and encoder-decoder.
+
+Layers are stacked with a leading L dimension and applied with
+``jax.lax.scan`` so that 94-layer configs compile as a single layer body —
+essential for the 512-device dry-run.  Heterogeneous layer behavior
+(gemma3's 5:1 local:global attention) rides through the scan as a per-layer
+flag selecting between precomputed masks.
+
+Three entry points share all code paths:
+    forward(params, batch, cfg)              -> logits (+aux)   [training]
+    prefill(params, batch, cfg, max_len)     -> logits, cache   [serving]
+    decode_step(params, tokens, cache, cfg)  -> logits, cache   [serving]
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import (
+    apply_norm,
+    attention_block,
+    make_causal_mask,
+    mlp_block,
+    softcap_logits,
+)
+from .moe import moe_block
+from .partitioning import constrain
+from .ssm import ssm_block
+
+# ---------------------------------------------------------------------------
+# Parameter shapes / init
+# ---------------------------------------------------------------------------
+
+
+def _norm_shape(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": (d,)}
+    return {"scale": (d,), "bias": (d,)}
+
+
+def _attn_shapes(cfg) -> Dict[str, tuple]:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    s = {"wq": (D, H * hd), "wk": (D, KV * hd), "wv": (D, KV * hd), "wo": (H * hd, D)}
+    if cfg.attn_bias:
+        s.update({"bq": (H * hd,), "bk": (KV * hd,), "bv": (KV * hd,)})
+    if cfg.qk_norm:
+        s.update({"q_norm": (hd,), "k_norm": (hd,)})
+    return s
+
+
+def _mlp_shapes(cfg, d_ff=None) -> Dict[str, tuple]:
+    F = d_ff or cfg.d_ff
+    D = cfg.d_model
+    s = {"w_up": (D, F), "w_down": (F, D)}
+    if cfg.gated_mlp:
+        s["w_gate"] = (D, F)
+    return s
+
+
+def _moe_shapes(cfg) -> Dict[str, tuple]:
+    e = cfg.moe
+    D, F, E = cfg.d_model, e.d_ff_expert, e.num_experts
+    s = {"router": (D, E), "w_up": (E, D, F), "w_down": (E, F, D)}
+    if cfg.gated_mlp:
+        s["w_gate"] = (E, D, F)
+    return s
+
+
+def _ssm_shapes(cfg) -> Dict[str, tuple]:
+    s = cfg.ssm
+    D = cfg.d_model
+    DI = s.d_inner(D)
+    N, R = s.d_state, s.resolved_dt_rank(D)
+    return {
+        "in_proj": (D, 2 * DI),
+        "conv_w": (s.d_conv, DI),
+        "conv_b": (DI,),
+        "x_proj": (DI, R + 2 * N),
+        "dt_proj": (R, DI),
+        "dt_bias": (DI,),
+        "A_log": (DI, N),
+        "D": (DI,),
+        "out_proj": (DI, D),
+    }
+
+
+def decoder_layer_shapes(cfg) -> Dict[str, Any]:
+    s: Dict[str, Any] = {"norm1": _norm_shape(cfg)}
+    if not cfg.attention_free:
+        s["attn"] = _attn_shapes(cfg)
+    if cfg.ssm is not None:
+        s["ssm"] = _ssm_shapes(cfg)
+    if cfg.moe is not None:
+        s["moe"] = _moe_shapes(cfg)
+        s["norm2"] = _norm_shape(cfg)
+    elif cfg.d_ff:
+        s["mlp"] = _mlp_shapes(cfg)
+        s["norm2"] = _norm_shape(cfg)
+    if cfg.encdec:  # decoder gains cross-attention
+        s["cross"] = _attn_shapes(cfg)
+        s["norm_cross"] = _norm_shape(cfg)
+    return s
+
+
+def encoder_layer_shapes(cfg) -> Dict[str, Any]:
+    return {
+        "norm1": _norm_shape(cfg),
+        "attn": _attn_shapes(cfg),
+        "norm2": _norm_shape(cfg),
+        "mlp": _mlp_shapes(cfg),
+    }
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    D, V = cfg.d_model, cfg.vocab
+    tree: Dict[str, Any] = {
+        "embed": (V, D),
+        "final_norm": _norm_shape(cfg),
+        "layers": jax.tree.map(
+            lambda s: (cfg.n_layers,) + s, decoder_layer_shapes(cfg),
+            is_leaf=lambda x: isinstance(x, tuple),
+        ),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = (V, D)
+    if cfg.learned_pos:
+        tree["pos_embed"] = (cfg.max_seq_len, D)
+    if cfg.encdec:
+        tree["encoder"] = {
+            "layers": jax.tree.map(
+                lambda s: (cfg.n_enc_layers,) + s, encoder_layer_shapes(cfg),
+                is_leaf=lambda x: isinstance(x, tuple),
+            ),
+            "final_norm": _norm_shape(cfg),
+        }
+    return tree
+
+
+def param_struct(cfg: ModelConfig, dtype: Optional[str] = None):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s, dt),
+        param_shapes(cfg),
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype: Optional[str] = None):
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(leaves))
+    dt = jnp.dtype(dtype or cfg.dtype)
+
+    def init_one(k, shape):
+        if len(shape) == 1:  # norms / biases / D
+            return jnp.zeros(shape, dt)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(k, shape, jnp.float32) / math.sqrt(fan_in)).astype(dt)
+
+    params = treedef.unflatten([init_one(k, s) for k, s in zip(keys, leaves)])
+    # SSM specifics: A_log ~ log(1..N), dt_bias ~ inv-softplus of ~1e-2, conv_b 0
+    if cfg.ssm is not None:
+        N = cfg.ssm.d_state
+        A = jnp.broadcast_to(
+            jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)),
+            params["layers"]["ssm"]["A_log"].shape,
+        )
+        params["layers"]["ssm"]["A_log"] = A.astype(dt)
+        params["layers"]["ssm"]["D"] = jnp.ones_like(params["layers"]["ssm"]["D"])
+        params["layers"]["ssm"]["dt_bias"] = jnp.full_like(
+            params["layers"]["ssm"]["dt_bias"], -4.6
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+
+def _mix(cfg, lp, x, positions, mask, cache, cache_pos, dispatch_mode):
+    """Token-mixing sublayer: attention / SSM / both in parallel (hymba)."""
+    h = apply_norm(x, lp["norm1"], cfg.norm, cfg.norm_eps)
+    outs = []
+    new_cache: Dict[str, Any] = {}
+    if not cfg.attention_free:
+        kv_cache = None
+        if cache is not None:
+            kv_cache = {"k": cache["k"], "v": cache["v"], "pos": cache_pos}
+        a_out, a_cache = attention_block(lp["attn"], h, cfg, positions, mask, kv_cache)
+        outs.append(a_out)
+        if a_cache is not None:
+            new_cache.update({"k": a_cache["k"], "v": a_cache["v"]})
+    if cfg.ssm is not None:
+        s_cache = None
+        if cache is not None:
+            s_cache = {"conv": cache["conv"], "ssm": cache["ssm"]}
+        s_out, s_cache_new = ssm_block(lp["ssm"], h, cfg, s_cache)
+        outs.append(s_out)
+        if s_cache_new is not None:
+            new_cache.update(s_cache_new)
+    mixed = outs[0] if len(outs) == 1 else 0.5 * (outs[0] + outs[1])
+    return x + mixed, (new_cache if cache is not None else None)
+
+
+def _channel(cfg, lp, x, aux, dispatch_mode, capacity_factor):
+    """Channel-mixing sublayer: dense MLP or MoE."""
+    if cfg.moe is not None:
+        h = apply_norm(x, lp["norm2"], cfg.norm, cfg.norm_eps)
+        out, a = moe_block(lp["moe"], h, cfg, capacity_factor, dispatch_mode)
+        return x + out, aux + a
+    if cfg.d_ff:
+        h = apply_norm(x, lp["norm2"], cfg.norm, cfg.norm_eps)
+        return x + mlp_block(lp["mlp"], h, cfg), aux
+    return x, aux
+
+
+def decoder_layer(cfg, lp, x, positions, masks, is_local, cache, cache_pos,
+                  enc_out=None, dispatch_mode="einsum", capacity_factor=1.25):
+    mask_full, mask_local = masks
+    mask = mask_full
+    if mask_local is not None:
+        mask = jnp.where(is_local, mask_local, mask_full)
+    aux = jnp.zeros((), jnp.float32)
+    x, new_cache = _mix(cfg, lp, x, positions, mask, cache, cache_pos, dispatch_mode)
+    if cfg.encdec:
+        h = apply_norm(x, lp["norm_cross"], cfg.norm, cfg.norm_eps)
+        c_cache = None
+        if cache is not None and enc_out is None:  # decode: static cross KV
+            c_cache = {"k": cache["ck"], "v": cache["cv"]}
+        c_out, _ = attention_block(lp["cross"], h, cfg, None, None,
+                                   c_cache, kv_x=enc_out, cross=True)
+        x = x + c_out
+    x, aux = _channel(cfg, lp, x, aux, dispatch_mode, capacity_factor)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+
+def _local_flags(cfg) -> jax.Array:
+    return jnp.array(
+        [cfg.is_local_layer(i) for i in range(cfg.n_layers)], dtype=bool
+    )
+
+
+def decoder_stack(cfg, layers, x, positions, masks, caches, cache_pos,
+                  enc_out=None, remat: str = "none", dispatch_mode="einsum",
+                  capacity_factor=1.25):
+    flags = _local_flags(cfg)
+
+    def body(carry, per_layer):
+        xc, aux = carry
+        lp, cache_l, is_local = per_layer
+        xc, new_cache, a = decoder_layer(
+            cfg, lp, xc, positions, masks, is_local, cache_l, cache_pos,
+            enc_out, dispatch_mode, capacity_factor,
+        )
+        return (xc, aux + a), new_cache
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        (layers, caches, flags))
+    return x, new_caches, aux
+
+
+def encoder_stack(cfg, enc_params, frames, remat: str = "none"):
+    """Whisper-style encoder over precomputed (stub) conv frames (B,T,D)."""
+    x = frames
+    T = x.shape[1]
+    pos = jnp.arange(T, dtype=jnp.float32)
+    half = cfg.d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    sin = jnp.sin(pos[:, None] * freqs[None])
+    cos = jnp.cos(pos[:, None] * freqs[None])
+    x = x + jnp.concatenate([sin, cos], axis=-1)[None].astype(x.dtype)
+
+    def body(xc, lp):
+        h = apply_norm(xc, lp["norm1"], cfg.norm, cfg.norm_eps)
+        a, _ = attention_block(lp["attn"], h, cfg, None, None)
+        xc = xc + a
+        h = apply_norm(xc, lp["norm2"], cfg.norm, cfg.norm_eps)
+        return xc + mlp_block(lp["mlp"], h, cfg), None
+
+    if remat in ("full", "dots"):
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, enc_params["layers"])
+    return apply_norm(x, enc_params["final_norm"], cfg.norm, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg, params, batch):
+    if "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.learned_pos:
+        S = x.shape[1]
+        off = batch.get("pos_offset", 0)
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], off, S, 0)[None]
+    return constrain(x.astype(jnp.dtype(cfg.dtype)), "batch", "seq", "embed")
+
+
+def _lm_logits(cfg, params, x):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return softcap_logits(logits, cfg.logit_softcap)
+
+
+def _make_caches(cfg, B, max_len, dtype):
+    L = cfg.n_layers
+    per: Dict[str, Any] = {}
+    if not cfg.attention_free:
+        KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        # sliding-window-only models can bound the cache; global layers need
+        # the full horizon, so size by the max requirement across layers
+        need_full = any(not cfg.is_local_layer(i) for i in range(L)) or cfg.window is None
+        S_kv = max_len if need_full or cfg.window is None else min(max_len, cfg.window)
+        per["k"] = jnp.zeros((L, B, S_kv, KV, hd), dtype)
+        per["v"] = jnp.zeros((L, B, S_kv, KV, hd), dtype)
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        DI = s.d_inner(cfg.d_model)
+        per["conv"] = jnp.zeros((L, B, s.d_conv - 1, DI), dtype)
+        per["ssm"] = jnp.zeros((L, B, DI, s.d_state), jnp.float32)
+    return per
+
+
+def forward(params, batch, cfg: ModelConfig, remat: str = "none",
+            dispatch_mode: str = "einsum", capacity_factor: float = 1.25):
+    """Training forward: full-sequence logits (+ MoE aux loss)."""
+    x = _embed_inputs(cfg, params, batch)
+    S = x.shape[1]
+    positions = batch.get("positions")
+    if positions is None and cfg.rope != "none":
+        positions = jnp.broadcast_to(jnp.arange(S), x.shape[:2])
+    enc_out = None
+    if cfg.encdec:
+        enc_out = encoder_stack(cfg, params["encoder"], batch["frames"], remat)
+    mask_full = make_causal_mask(S, S)
+    mask_local = make_causal_mask(S, S, cfg.window) if cfg.window else None
+    x, _, aux = decoder_stack(
+        cfg, params["layers"], x, positions, (mask_full, mask_local),
+        None, None, enc_out, remat, dispatch_mode, capacity_factor,
+    )
+    x = apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    return _lm_logits(cfg, params, x), aux
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int,
+            dispatch_mode: str = "einsum", capacity_factor: float = 1.25):
+    """Process the prompt, returning last-position logits + serving cache."""
+    x = _embed_inputs(cfg, params, batch)
+    B, S = x.shape[0], x.shape[1]
+    dtype = jnp.dtype(cfg.dtype)
+    positions = batch.get("positions")
+    if positions is None and cfg.rope != "none":
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    enc_out = None
+    caches = _make_caches(cfg, B, max_len, dtype)
+    if cfg.encdec:
+        enc_out = encoder_stack(cfg, params["encoder"], batch["frames"])
+        # precompute cross KV per layer once
+        KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        T = enc_out.shape[1]
+
+        def cross_kv(lp):
+            k = jnp.einsum("btd,dh->bth", enc_out, lp["cross"]["wk"]).reshape(B, T, KV, hd)
+            v = jnp.einsum("btd,dh->bth", enc_out, lp["cross"]["wv"]).reshape(B, T, KV, hd)
+            if cfg.attn_bias:
+                k = k + lp["cross"]["bk"].reshape(1, 1, KV, hd)
+                v = v + lp["cross"]["bv"].reshape(1, 1, KV, hd)
+            return k, v
+
+        ck, cv = jax.vmap(cross_kv)(params["layers"])
+        caches["ck"], caches["cv"] = ck, cv
+    S_kv = caches["k"].shape[2] if "k" in caches else S
+    mask_full = make_causal_mask(S, S_kv)
+    mask_local = make_causal_mask(S, S_kv, cfg.window) if cfg.window else None
+    x, new_caches, _ = decoder_stack(
+        cfg, params["layers"], x, positions, (mask_full, mask_local),
+        caches, jnp.zeros((), jnp.int32), enc_out, "none", dispatch_mode,
+        capacity_factor,
+    )
+    if cfg.encdec:
+        new_caches["ck"], new_caches["cv"] = caches["ck"], caches["cv"]
+    x = apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = _lm_logits(cfg, params, x[:, -1:])
+    cache = {"layers": new_caches, "pos": jnp.full((), S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig,
+                dispatch_mode: str = "einsum", capacity_factor: float = 1.25):
+    """One serving step: tokens (B, 1) -> logits (B, 1, V), updated cache."""
+    pos = cache["pos"]
+    batch = {"tokens": tokens, "pos_offset": pos} if tokens.dtype in (jnp.int32, jnp.int64) \
+        else {"embeds": tokens, "pos_offset": pos}
+    x = _embed_inputs(cfg, params, batch)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    layers_cache = cache["layers"]
+    if "k" in layers_cache:
+        S_kv = layers_cache["k"].shape[2]
+        k_pos = jnp.arange(S_kv)
+        valid = (k_pos[None, :] <= pos)[None]             # (1, 1, S_kv)
+        mask_full = jnp.broadcast_to(valid, (B, 1, S_kv))
+        mask_local = None
+        if cfg.window:
+            mask_local = mask_full & (k_pos[None, None, :] > pos - cfg.window)
+    else:
+        mask_full, mask_local = None, None
+    enc_out = None  # cross-attention uses the cached encoder KV
+    x, new_layer_caches, _ = decoder_stack(
+        cfg, params["layers"], x, positions, (mask_full, mask_local),
+        layers_cache, pos, enc_out, "none", dispatch_mode, capacity_factor,
+    )
+    if cfg.encdec:
+        new_layer_caches["ck"] = layers_cache["ck"]
+        new_layer_caches["cv"] = layers_cache["cv"]
+    x = apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = _lm_logits(cfg, params, x)
+    return logits, {"layers": new_layer_caches, "pos": pos + 1}

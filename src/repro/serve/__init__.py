@@ -1,0 +1,4 @@
+"""Serving substrate: continuous batching."""
+from .batcher import ContinuousBatcher
+
+__all__ = ["ContinuousBatcher"]

@@ -1,0 +1,9 @@
+"""LSHS-as-sharding-optimizer: plans, load estimator, HLO collective parser."""
+from .estimator import LoadEstimate, estimate
+from .hlo import collective_bytes
+from .optimizer import PlanChoice, choose_plan
+from .plans import Plan, activation_rules, batch_specs, cache_spec_tree, candidate_plans, param_spec_tree, param_sharding_tree
+
+__all__ = ["LoadEstimate", "Plan", "PlanChoice", "activation_rules", "batch_specs",
+           "cache_spec_tree", "candidate_plans", "choose_plan", "collective_bytes",
+           "estimate", "param_spec_tree", "param_sharding_tree"]

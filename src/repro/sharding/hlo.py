@@ -1,0 +1,163 @@
+"""HLO collective parser: extracts per-device collective bytes from lowered /
+compiled HLO text for the roofline's collective term (§Roofline).
+
+``cost_analysis()`` does not report collective traffic, so we sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction.  Shapes in post-SPMD HLO are per-partition,
+so the sums are per-device bytes.  Operands are printed by name in compiled
+HLO, so we first build a name -> shape table from instruction definitions.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# instruction definition:  %name = <shape-or-tuple> opcode(...)
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OPERAND_NAME_RE = re.compile(r"%?([\w.\-]+)")
+
+
+def _shapes_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        b = _DTYPE_BYTES.get(m.group(1))
+        if b is None:
+            continue
+        n = 1
+        dims = m.group(2).strip()
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * b
+    return total
+
+
+# computation header: `%name (args) -> result {`  /  `ENTRY %name (...) -> ... {`
+# (args may contain nested parens: tuple-typed params)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*\S.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: List[str] = []
+    name = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            name = m.group(1)
+            cur = []
+            comps[name] = cur
+        elif line.strip() == "}":
+            name = None
+        elif name is not None:
+            cur.append(line)
+    return comps
+
+
+def loop_multipliers(hlo_text: str, default_trip: int = 1) -> Dict[str, int]:
+    """Execution-count multiplier per computation, accounting for (nested)
+    while loops.  Trip counts are inferred from the largest integer constant
+    in the loop's condition computation (the standard `i < L` pattern XLA
+    emits for lax.scan); computations not under a loop get 1."""
+    comps = _split_computations(hlo_text)
+    # find loops: computation -> [(cond, body)]
+    loops: Dict[str, List] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            for m in _WHILE_RE.finditer(line):
+                loops.setdefault(cname, []).append((m.group(1), m.group(2)))
+    trip: Dict[str, int] = {}
+    for cname, pairs in loops.items():
+        for cond, body in pairs:
+            consts = [int(c) for l in comps.get(cond, []) for c in _CONST_RE.findall(l)]
+            trip[body] = max(consts) if consts else default_trip
+            trip[cond] = trip[body]
+    # propagate: multiplier(comp) = product of trips on the call chain.
+    # build caller edges for called computations (calls/fusions/bodies)
+    call_re = re.compile(
+        r"(?:to_apply|body|condition|calls)=%?([\w.\-]+)"
+    )
+    callers: Dict[str, List[str]] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            for m in call_re.finditer(line):
+                callers.setdefault(m.group(1), []).append(cname)
+
+    mult_cache: Dict[str, float] = {}
+
+    def mult(c: str, depth=0) -> float:
+        if depth > 50:
+            return 1.0
+        if c in mult_cache:
+            return mult_cache[c]
+        m = float(trip.get(c, 1))
+        ups = callers.get(c, [])
+        m *= max((mult(u, depth + 1) for u in ups), default=1.0)
+        mult_cache[c] = m
+        return m
+
+    return {c: int(mult(c)) for c in comps}
+
+
+def collective_bytes(hlo_text: str, loop_aware: bool = True) -> Dict[str, float]:
+    """Sum operand bytes per collective kind (async ``-start`` counted once,
+    ``-done`` skipped).  ``loop_aware`` multiplies instructions inside while
+    bodies by the loop trip count (XLA's own cost analysis counts loop bodies
+    once — wrong by ~n_layers for lax.scan-stacked models)."""
+    mults = loop_multipliers(hlo_text) if loop_aware else {}
+    name_shape: Dict[str, str] = {}
+    collected: List = []  # (kind, operand_str, multiplier)
+    comp = None
+    for line in hlo_text.splitlines():
+        hm = _COMP_RE.match(line.strip())
+        if hm and line.rstrip().endswith("{"):
+            comp = hm.group(1)
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, opcode, rest = m.groups()
+        name_shape[name] = shape_str
+        for k in _COLLECTIVE_KINDS:
+            if opcode == k or opcode == k + "-start":
+                # operand list = rest up to matching close paren (approx: first ')')
+                operand_str = rest.split(")")[0]
+                collected.append((k, operand_str, mults.get(comp, 1)))
+                break
+
+    totals: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for kind, operand_str, mult in collected:
+        size = _shapes_bytes(operand_str)  # inline-typed operands (lowered HLO)
+        if size == 0:  # compiled HLO: operands are bare names
+            for om in _OPERAND_NAME_RE.finditer(operand_str):
+                size += _shapes_bytes(name_shape.get(om.group(1), ""))
+        totals[kind] += size * max(mult, 1)
+        counts[kind] += 1
+    out = dict(totals)
+    out["total"] = float(sum(totals.values()))
+    for k, c in counts.items():
+        out[f"n_{k}"] = float(c)
+    return out

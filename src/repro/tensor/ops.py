@@ -1,0 +1,20 @@
+"""MTTKRP and tensor double contraction (paper §8.4).
+
+MTTKRP (Matricized Tensor Times Khatri-Rao Product) is the closed-form inner
+step of alternating least squares for CP tensor factorization:
+    M[i, f] = sum_{j,k} X[i,j,k] B[j,f] C[k,f]
+expressed in Einstein notation as einsum("ijk,jf,kf->if").  The double
+contraction sums over two shared modes: einsum("ijk,jkf->if") ==
+tensordot(X, Y, axes=2).
+"""
+from __future__ import annotations
+
+from repro.core import GraphArray, einsum, tensordot
+
+
+def mttkrp(X: GraphArray, B: GraphArray, C: GraphArray) -> GraphArray:
+    return einsum("ijk,jf,kf->if", X, B, C).compute()
+
+
+def double_contraction(X: GraphArray, Y: GraphArray) -> GraphArray:
+    return tensordot(X, Y, axes=2).compute()

@@ -1,0 +1,8 @@
+"""Training substrate: optimizer, step builders, data pipeline."""
+from .data import DataConfig, TokenPipeline
+from .optim import AdamConfig, adam_update, init_opt_state, lr_at
+from .steps import cross_entropy, init_train_state, make_prefill, make_serve_step, make_train_step
+
+__all__ = ["AdamConfig", "DataConfig", "TokenPipeline", "adam_update", "cross_entropy",
+           "init_opt_state", "init_train_state", "lr_at", "make_prefill",
+           "make_serve_step", "make_train_step"]

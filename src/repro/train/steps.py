@@ -1,0 +1,115 @@
+"""train_step / serve_step builders: the jit targets of the launcher and the
+multi-pod dry-run.
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics) function
+with: bf16 compute cast, remat policy and MoE dispatch from the plan, optional
+gradient accumulation over microbatches (lax.scan), optional bf16 gradient
+all-reduce ("compression"), AdamW update, and activation sharding constraints
+installed from the plan's Rules.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward, decode_step, prefill, use_rules
+from repro.models.config import ModelConfig
+from repro.sharding.plans import Plan, activation_rules
+
+from .optim import AdamConfig, adam_update
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    plan: Plan,
+    opt_cfg: AdamConfig,
+    rules=None,
+    compute_dtype: str = "bfloat16",
+):
+    cast = jnp.dtype(compute_dtype)
+
+    def loss_fn(params, batch):
+        cparams = jax.tree.map(
+            lambda p: p.astype(cast) if p.dtype in (jnp.float32, jnp.bfloat16) else p,
+            params,
+        )
+        with use_rules(rules):
+            logits, aux = forward(
+                cparams, batch, cfg,
+                remat=plan.remat, dispatch_mode=plan.dispatch_mode,
+            )
+        return cross_entropy(logits, batch["labels"]) + aux, aux
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def one_grad(params, batch):
+        (loss, aux), grads = grad_fn(params, batch)
+        if plan.grad_dtype == "bfloat16":  # compressed all-reduce
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        return loss, aux, grads
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        if plan.accum_steps > 1:
+            a = plan.accum_steps
+
+            def micro(carry, mb):
+                acc, lsum = carry
+                loss, _aux, g = one_grad(params, mb)
+                acc = jax.tree.map(
+                    lambda x, y: x + y.astype(jnp.float32) / a, acc, g
+                )
+                return (acc, lsum + loss / a), None
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]), batch
+            )
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (zero, 0.0), micro_batches)
+        else:
+            loss, _aux, grads = one_grad(params, batch)
+        new_params, new_opt, metrics = adam_update(opt_cfg, params, grads, opt)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, plan: Plan, rules=None):
+    """One decode step: (params, tokens, cache) -> (next_tokens, cache)."""
+
+    def serve_step(params, tokens, cache):
+        with use_rules(rules):
+            logits, cache = decode_step(
+                params, tokens, cache, cfg, dispatch_mode=plan.dispatch_mode
+            )
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, plan: Plan, max_len: int, rules=None):
+    def prefill_fn(params, batch):
+        with use_rules(rules):
+            return prefill(params, batch, cfg, max_len=max_len,
+                           dispatch_mode=plan.dispatch_mode)
+
+    return prefill_fn
+
+
+def init_train_state(cfg: ModelConfig, key, param_dtype: str = "float32"):
+    from repro.models import init_params
+    from .optim import init_opt_state
+
+    params = init_params(cfg, key, dtype=param_dtype)
+    return {"params": params, "opt": init_opt_state(params)}

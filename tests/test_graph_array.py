@@ -1,0 +1,249 @@
+"""GraphArray numerics against the numpy oracle (Fig. 5 op set, Table 1),
+including hypothesis property tests over random shapes/grids."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except Exception:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.core import ArrayContext, ClusterSpec, einsum, tensordot
+
+
+def make_ctx(k=4, r=2, ng=(2, 2), seed=0, **kw):
+    return ArrayContext(cluster=ClusterSpec(k, r), node_grid=ng, seed=seed, **kw)
+
+
+class TestElementwise:
+    def test_unary_chain(self):
+        ctx = make_ctx()
+        X = ctx.random((64, 48), grid=(4, 2))
+        Y = (-X).compute()
+        assert np.allclose(Y.to_numpy(), -X.to_numpy())
+        Z = X.exp().log().compute()
+        assert np.allclose(Z.to_numpy(), X.to_numpy(), atol=1e-12)
+
+    def test_binary_ops(self):
+        ctx = make_ctx()
+        X = ctx.random((64, 48), grid=(4, 2))
+        Y = ctx.random((64, 48), grid=(4, 2))
+        for op, fn in [("__add__", np.add), ("__sub__", np.subtract),
+                       ("__mul__", np.multiply)]:
+            Z = getattr(X, op)(Y).compute()
+            assert np.allclose(Z.to_numpy(), fn(X.to_numpy(), Y.to_numpy()))
+
+    def test_scalar_ops(self):
+        ctx = make_ctx()
+        X = ctx.random((32, 8), grid=(2, 2))
+        assert np.allclose((2.0 * X).to_numpy(), 2.0 * X.to_numpy())
+        assert np.allclose((1.0 - X).to_numpy(), 1.0 - X.to_numpy())
+        assert np.allclose((X / 3.0).to_numpy(), X.to_numpy() / 3.0)
+
+    def test_sigmoid(self):
+        ctx = make_ctx()
+        X = ctx.random((32, 8), grid=(4, 1))
+        got = X.sigmoid().to_numpy()
+        assert np.allclose(got, 1.0 / (1.0 + np.exp(-X.to_numpy())))
+
+    def test_column_broadcast(self):
+        """§6 Hessian: c x X multiplies c into every column of X."""
+        ctx = make_ctx()
+        X = ctx.random((40, 6), grid=(4, 1))
+        c = ctx.random((40, 1), grid=(4, 1))
+        assert np.allclose((c * X).to_numpy(), c.to_numpy() * X.to_numpy())
+        v = ctx.random((40,), grid=(4,))
+        assert np.allclose((v * X).to_numpy(), v.to_numpy()[:, None] * X.to_numpy())
+        assert np.allclose((X * v).to_numpy(), X.to_numpy() * v.to_numpy()[:, None])
+
+    def test_grid_mismatch_raises(self):
+        ctx = make_ctx()
+        X = ctx.random((64, 48), grid=(4, 2))
+        Y = ctx.random((64, 48), grid=(2, 2))
+        with pytest.raises(ValueError):
+            _ = X + Y
+
+
+class TestReductions:
+    def test_sum_axis0(self):
+        ctx = make_ctx()
+        X = ctx.random((60, 40), grid=(4, 2))
+        assert np.allclose(X.sum(axis=0).to_numpy(), X.to_numpy().sum(0))
+
+    def test_sum_axis1(self):
+        ctx = make_ctx()
+        X = ctx.random((60, 40), grid=(4, 2))
+        assert np.allclose(X.sum(axis=1).to_numpy(), X.to_numpy().sum(1))
+
+    def test_sum_all(self):
+        ctx = make_ctx()
+        X = ctx.random((60, 40), grid=(4, 4))
+        assert np.allclose(X.sum().to_numpy(), X.to_numpy().sum())
+
+    def test_sum_3d_first_axis(self):
+        """§8.1: sum over a tensor partitioned along its first axis."""
+        ctx = make_ctx()
+        X = ctx.random((24, 10, 8), grid=(4, 1, 1))
+        assert np.allclose(X.sum(axis=0).to_numpy(), X.to_numpy().sum(0))
+
+
+class TestLinearAlgebra:
+    def test_matmul_square(self):
+        ctx = make_ctx()
+        A = ctx.random((64, 64), grid=(4, 4))
+        B = ctx.random((64, 64), grid=(4, 4))
+        assert np.allclose((A @ B).to_numpy(), A.to_numpy() @ B.to_numpy())
+
+    def test_matmul_rect(self):
+        ctx = make_ctx()
+        A = ctx.random((30, 44), grid=(3, 4))
+        B = ctx.random((44, 26), grid=(4, 2))
+        assert np.allclose((A @ B).to_numpy(), A.to_numpy() @ B.to_numpy())
+
+    def test_fused_transpose_inner(self):
+        """X^T Y with transpose fused into the matmul (§6)."""
+        ctx = make_ctx()
+        X = ctx.random((80, 6), grid=(8, 1))
+        Y = ctx.random((80, 6), grid=(8, 1))
+        got = (X.T @ Y).to_numpy()
+        assert np.allclose(got, X.to_numpy().T @ Y.to_numpy())
+
+    def test_fused_transpose_outer(self):
+        ctx = make_ctx()
+        X = ctx.random((32, 6), grid=(4, 1))
+        Y = ctx.random((32, 6), grid=(4, 1))
+        assert np.allclose((X @ Y.T).to_numpy(), X.to_numpy() @ Y.to_numpy().T)
+
+    def test_matvec(self):
+        ctx = make_ctx()
+        X = ctx.random((48, 12), grid=(4, 1))
+        b = ctx.random((12, 1), grid=(1, 1))
+        assert np.allclose((X @ b).to_numpy(), X.to_numpy() @ b.to_numpy())
+
+    def test_vector_dot(self):
+        ctx = make_ctx()
+        x = ctx.random((40,), grid=(4,))
+        y = ctx.random((40,), grid=(4,))
+        assert np.allclose((x @ y).to_numpy(), x.to_numpy() @ y.to_numpy())
+
+
+class TestTensorAlgebra:
+    def test_tensordot_double_contraction(self):
+        """§8.4 double contraction: X_{ijk} Y_{jkf} -> Z_{if}."""
+        ctx = make_ctx()
+        X = ctx.random((12, 10, 8), grid=(2, 2, 2))
+        Y = ctx.random((10, 8, 6), grid=(2, 2, 1))
+        got = tensordot(X, Y, axes=2).to_numpy()
+        assert np.allclose(got, np.tensordot(X.to_numpy(), Y.to_numpy(), axes=2))
+
+    def test_einsum_mttkrp(self):
+        """§8.4 MTTKRP: einsum(ijk,jf,kf->if)."""
+        ctx = make_ctx()
+        X = ctx.random((24, 20, 16), grid=(2, 2, 1))
+        B = ctx.random((20, 6), grid=(2, 1))
+        C = ctx.random((16, 6), grid=(1, 1))
+        got = einsum("ijk,jf,kf->if", X, B, C).to_numpy()
+        ref = np.einsum("ijk,jf,kf->if", X.to_numpy(), B.to_numpy(), C.to_numpy())
+        assert np.allclose(got, ref)
+
+    def test_einsum_matmul_equiv(self):
+        ctx = make_ctx()
+        A = ctx.random((24, 16), grid=(2, 2))
+        B = ctx.random((16, 12), grid=(2, 2))
+        got = einsum("ik,kj->ij", A, B).to_numpy()
+        assert np.allclose(got, A.to_numpy() @ B.to_numpy())
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def shape_and_grid(draw):
+        m = draw(st.integers(4, 40))
+        n = draw(st.integers(4, 40))
+        gm = draw(st.integers(1, min(m, 4)))
+        gn = draw(st.integers(1, min(n, 4)))
+        return (m, n), (gm, gn)
+
+    class TestProperties:
+        @given(sg=shape_and_grid(), seed=st.integers(0, 2**16))
+        @settings(max_examples=25, deadline=None)
+        def test_add_matches_numpy(self, sg, seed):
+            (m, n), grid = sg
+            ctx = make_ctx(seed=seed)
+            X = ctx.random((m, n), grid=grid)
+            Y = ctx.random((m, n), grid=grid)
+            assert np.allclose((X + Y).to_numpy(), X.to_numpy() + Y.to_numpy())
+
+        @given(sg=shape_and_grid(), inner=st.integers(4, 30),
+               gi=st.integers(1, 4), seed=st.integers(0, 2**16))
+        @settings(max_examples=25, deadline=None)
+        def test_matmul_matches_numpy(self, sg, inner, gi, seed):
+            (m, n), (gm, gn) = sg
+            gi = min(gi, inner)
+            ctx = make_ctx(seed=seed)
+            A = ctx.random((m, inner), grid=(gm, gi))
+            B = ctx.random((inner, n), grid=(gi, gn))
+            assert np.allclose((A @ B).to_numpy(), A.to_numpy() @ B.to_numpy(),
+                               atol=1e-9)
+
+        @given(sg=shape_and_grid(), axis=st.integers(0, 1), seed=st.integers(0, 2**16))
+        @settings(max_examples=25, deadline=None)
+        def test_sum_matches_numpy(self, sg, axis, seed):
+            (m, n), grid = sg
+            ctx = make_ctx(seed=seed)
+            X = ctx.random((m, n), grid=grid)
+            assert np.allclose(X.sum(axis=axis).to_numpy(), X.to_numpy().sum(axis))
+
+        @given(sg=shape_and_grid(), seed=st.integers(0, 2**16),
+               sched=st.sampled_from(["lshs", "roundrobin", "dynamic"]))
+        @settings(max_examples=15, deadline=None)
+        def test_scheduler_invariance(self, sg, seed, sched):
+            """Numerical results are invariant to the scheduler (placement
+            only moves data, never changes values)."""
+            (m, n), (gm, gn) = sg
+            ctx = make_ctx(seed=seed, scheduler=sched)
+            A = ctx.random((m, n), grid=(gm, gn))
+            B = ctx.random((n, m), grid=(gn, gm))
+            assert np.allclose((A @ B).to_numpy(), A.to_numpy() @ B.to_numpy(),
+                               atol=1e-9)
+
+
+class TestExtendedAPI:
+    def test_mean_max_min(self):
+        ctx = make_ctx()
+        X = ctx.random((48, 32), grid=(4, 2))
+        assert np.allclose(X.mean(axis=0).to_numpy(), X.to_numpy().mean(0))
+        assert np.allclose(X.max(axis=1).to_numpy(), X.to_numpy().max(1))
+        assert np.allclose(X.min().to_numpy(), X.to_numpy().min())
+        assert np.allclose(X.mean().to_numpy(), X.to_numpy().mean())
+
+    def test_eager_transpose(self):
+        ctx = make_ctx()
+        X = ctx.random((24, 36), grid=(2, 3))
+        assert np.allclose(X.transpose().to_numpy(), X.to_numpy().T)
+        Y = ctx.random((8, 12, 6), grid=(2, 2, 1))
+        got = Y.transpose((2, 0, 1)).to_numpy()
+        assert np.allclose(got, np.transpose(Y.to_numpy(), (2, 0, 1)))
+
+    def test_concatenate(self):
+        from repro.core.graph_array import concatenate
+
+        ctx = make_ctx()
+        X = ctx.random((48, 32), grid=(4, 2))
+        Y = ctx.random((24, 32), grid=(2, 2))
+        C = concatenate([X, Y], axis=0)
+        assert np.allclose(C.to_numpy(),
+                           np.concatenate([X.to_numpy(), Y.to_numpy()], 0))
+        Z = ctx.random((16, 32), grid=(2, 2))  # 8-row blocks: mismatched
+        with pytest.raises(ValueError):
+            concatenate([X, Z], axis=0)
+
+    def test_max_reduction_zero_comm_first_level(self):
+        """max/min reductions ride the same locality-paired Reduce."""
+        ctx = make_ctx(k=4, r=2, ng=(4, 1))
+        X = ctx.random((512, 16), grid=(8, 1))
+        ctx.reset_loads()
+        X.max(axis=0).compute()
+        assert len(ctx.state.transfers) == 3  # k-1

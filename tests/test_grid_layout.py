@@ -1,0 +1,96 @@
+"""Grid geometry, softmax auto-partitioning (§4) and hierarchical layout (Fig. 4)."""
+import numpy as np
+import pytest
+
+from repro.core import ArrayGrid, ClusterSpec, HierarchicalLayout, NodeGrid, auto_grid
+from repro.core.layout import default_node_grid
+
+
+class TestArrayGrid:
+    def test_block_shapes_even(self):
+        g = ArrayGrid((256, 256), (4, 4))
+        assert g.block_shape((0, 0)) == (64, 64)
+        assert g.num_blocks == 16
+
+    def test_block_shapes_uneven(self):
+        g = ArrayGrid((10, 7), (3, 2))
+        sizes0 = g.block_sizes(0)
+        sizes1 = g.block_sizes(1)
+        assert sum(sizes0) == 10 and len(sizes0) == 3
+        assert sum(sizes1) == 7 and len(sizes1) == 2
+
+    def test_slices_tile_array(self):
+        g = ArrayGrid((9, 5), (2, 3))
+        seen = np.zeros((9, 5), dtype=int)
+        for idx in g.iter_indices():
+            seen[g.block_slices(idx)] += 1
+        assert (seen == 1).all()
+
+    def test_grid_validation(self):
+        with pytest.raises(ValueError):
+            ArrayGrid((4,), (8,))
+        with pytest.raises(ValueError):
+            ArrayGrid((4, 4), (2,))
+
+
+class TestAutoGrid:
+    def test_square_matrix_balanced(self):
+        g = auto_grid((4096, 4096), 16)
+        assert g.grid == (4, 4)
+
+    def test_tall_skinny_partitions_tall_axis(self):
+        g = auto_grid((31_250_000, 256), 16)
+        assert g.grid[0] >= 8 and g.grid[1] == 1
+
+    def test_paper_3d_example(self):
+        # §4: p=16, two large equal dims + one small -> (4, 4, 1)
+        g = auto_grid((1024, 1024, 8), 16)
+        assert g.grid == (4, 4, 1)
+
+    def test_never_exceeds_axis(self):
+        g = auto_grid((3, 1000), 64)
+        assert g.grid[0] <= 3
+
+
+class TestHierarchicalLayout:
+    def test_fig4_mapping(self):
+        """Fig. 4: (4,4) blocks on a (2,2) node grid with 4 workers/node."""
+        grid = ArrayGrid((256, 256), (4, 4))
+        lay = HierarchicalLayout(grid, NodeGrid((2, 2)), ClusterSpec(4, 4))
+        # node rule: l = (i%2)*2 + j%2
+        for i in range(4):
+            for j in range(4):
+                assert lay.node_of((i, j)) == (i % 2) * 2 + j % 2
+        # worker round-robin: A[2,3] -> N1 W3 (paper's worked example)
+        assert lay.placement((2, 3)) == (1, 3)
+
+    def test_load_balance(self):
+        grid = ArrayGrid((512, 512), (8, 8))
+        lay = HierarchicalLayout(grid, NodeGrid((2, 2)), ClusterSpec(4, 4))
+        loads = lay.load_per_node()
+        assert loads.max() == loads.min()
+
+    def test_colocation_same_grid(self):
+        """Operands with equal shape+grid are co-located blockwise (§4)."""
+        grid = ArrayGrid((100, 80), (5, 4))
+        spec, ng = ClusterSpec(4, 2), NodeGrid((2, 2))
+        la = HierarchicalLayout(grid, ng, spec)
+        lb = HierarchicalLayout(grid, ng, spec)
+        for idx in grid.iter_indices():
+            assert la.placement(idx) == lb.placement(idx)
+
+    def test_row_partition_on_row_node_grid(self):
+        grid = ArrayGrid((1000, 4), (16, 1))
+        lay = HierarchicalLayout(grid, NodeGrid((4, 1)), ClusterSpec(4, 4))
+        for i in range(16):
+            assert lay.node_of((i, 0)) == i % 4
+
+    def test_node_grid_must_match_cluster(self):
+        with pytest.raises(ValueError):
+            HierarchicalLayout(ArrayGrid((4, 4), (2, 2)), NodeGrid((2, 2)), ClusterSpec(8, 1))
+
+    def test_default_node_grid_factors(self):
+        ng = default_node_grid(ArrayGrid((1000, 4), (16, 1)), ClusterSpec(4, 1))
+        assert ng.num_nodes == 4
+        ng2 = default_node_grid(ArrayGrid((100, 100), (4, 4)), ClusterSpec(16, 1))
+        assert ng2.dims[0] == ng2.dims[1] == 4

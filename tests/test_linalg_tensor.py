@@ -1,0 +1,125 @@
+"""TSQR (paper §8.3), SUMMA baseline (§8.2/A.5.1), tensor algebra (§8.4)."""
+import numpy as np
+import pytest
+
+from repro.core import ArrayContext, ClusterSpec
+from repro.linalg import recursive_matmul, summa_matmul, tsqr_direct, tsqr_indirect
+from repro.tensor import double_contraction, mttkrp
+
+
+def make_ctx(k=4, r=2, ng=None, seed=0, **kw):
+    return ArrayContext(cluster=ClusterSpec(k, r), node_grid=ng or (k, 1), seed=seed, **kw)
+
+
+class TestTSQR:
+    @pytest.mark.parametrize("fn", [tsqr_direct, tsqr_indirect])
+    def test_reconstruction(self, fn):
+        ctx = make_ctx()
+        X = ctx.random((256, 12), grid=(8, 1))
+        Q, R = fn(ctx, X)
+        Qn, Rn = Q.to_numpy(), R.to_numpy()
+        assert np.allclose(Qn @ Rn, X.to_numpy(), atol=1e-8)
+
+    @pytest.mark.parametrize("fn", [tsqr_direct, tsqr_indirect])
+    def test_orthonormal_q(self, fn):
+        ctx = make_ctx()
+        X = ctx.random((256, 12), grid=(8, 1))
+        Q, _ = fn(ctx, X)
+        Qn = Q.to_numpy()
+        assert np.allclose(Qn.T @ Qn, np.eye(12), atol=1e-8)
+
+    @pytest.mark.parametrize("fn", [tsqr_direct, tsqr_indirect])
+    def test_r_upper_triangular(self, fn):
+        ctx = make_ctx()
+        X = ctx.random((128, 8), grid=(4, 1))
+        _, R = fn(ctx, X)
+        Rn = R.to_numpy()
+        assert np.allclose(Rn, np.triu(Rn), atol=1e-12)
+
+    def test_single_block_degenerate(self):
+        ctx = make_ctx(k=1, r=1, ng=(1, 1))
+        X = ctx.random((64, 8), grid=(1, 1))
+        Q, R = tsqr_indirect(ctx, X)
+        assert np.allclose(Q.to_numpy() @ R.to_numpy(), X.to_numpy(), atol=1e-9)
+
+    def test_requires_single_column_partition(self):
+        ctx = make_ctx()
+        X = ctx.random((64, 8), grid=(4, 2))
+        with pytest.raises(ValueError):
+            tsqr_direct(ctx, X)
+
+
+class TestSUMMA:
+    def test_summa_correct(self):
+        ctx = make_ctx(k=4, r=2, ng=(2, 2))
+        A = ctx.random((64, 64), grid=(4, 4))
+        B = ctx.random((64, 64), grid=(4, 4))
+        Z = summa_matmul(ctx, A, B)
+        assert np.allclose(Z.to_numpy(), A.to_numpy() @ B.to_numpy())
+
+    def test_lshs_matmul_network_vs_summa(self):
+        """DGEMM (Fig. 10 / A.5): greedy LSHS trades some volume for
+        locality/caching (SUMMA is output-stationary and volume-optimal
+        here); the paper's competitiveness claim is about *time*, where
+        SUMMA at worker granularity pays C(n) on every hop while LSHS pays
+        only node-level crossings.  We assert (a) volume stays within 2x,
+        and (b) under the paper's time model LSHS wins."""
+        import math
+
+        from repro.core import bounds
+
+        def run(algo):
+            ctx = make_ctx(k=4, r=4, ng=(2, 2), backend="sim", seed=1)
+            A = ctx.random((1024, 1024), grid=(4, 4))
+            B = ctx.random((1024, 1024), grid=(4, 4))
+            ctx.reset_loads()
+            if algo == "summa":
+                summa_matmul(ctx, A, B)
+            else:
+                (A @ B).compute()
+            return ctx.state.network_elements(), ctx.state.S[:, 1].max()
+
+        lshs_net, lshs_in = run("lshs")
+        summa_net, _ = run("summa")
+        assert lshs_net <= 2 * summa_net
+        # time model: per-node max inbound bytes over inter-node bandwidth
+        # vs SUMMA's 2 sqrt(p) log(sqrt p) C(n) broadcast schedule (A.5.1)
+        m = bounds.CommModel(gamma=0.0)
+        p, k, N = 16, 4, 1024 * 1024
+        summa_time = bounds.square_matmul_summa(m, N, p, k)
+        lshs_time = m.beta * lshs_in * 8 + math.log2(k) * m.alpha
+        assert lshs_time < summa_time
+
+
+class TestTensor:
+    def test_mttkrp_matches_numpy(self):
+        ctx = make_ctx(k=4, r=2, ng=(4, 1, 1))
+        X = ctx.random((32, 24, 16), grid=(4, 2, 1))
+        B = ctx.random((24, 5), grid=(2, 1))
+        C = ctx.random((16, 5), grid=(1, 1))
+        got = mttkrp(X, B, C).to_numpy()
+        ref = np.einsum("ijk,jf,kf->if", X.to_numpy(), B.to_numpy(), C.to_numpy())
+        assert np.allclose(got, ref)
+
+    def test_double_contraction_matches_numpy(self):
+        ctx = make_ctx(k=4, r=2, ng=(1, 4, 1))
+        X = ctx.random((12, 16, 10), grid=(1, 4, 1))
+        Y = ctx.random((16, 10, 7), grid=(4, 1, 1))
+        got = double_contraction(X, Y).to_numpy()
+        assert np.allclose(got, np.tensordot(X.to_numpy(), Y.to_numpy(), axes=2))
+
+    def test_mttkrp_node_grid_sensitivity(self):
+        """§8.4: the node grid matters — an aligned factoring spreads the
+        I-partitioned tensor over nodes (low Eq.2 objective); a mismatched
+        factoring stacks every X block on one node."""
+        def run(ng):
+            ctx = make_ctx(k=4, r=4, ng=ng, backend="sim", seed=2)
+            X = ctx.random((64, 64, 64), grid=(4, 1, 1))
+            B = ctx.random((64, 8), grid=(1, 1))
+            C = ctx.random((64, 8), grid=(1, 1))
+            mttkrp(X, B, C)  # objective includes data placement memory
+            return ctx.state.objective()
+
+        aligned = run((4, 1, 1))
+        mismatched = run((1, 4, 1))
+        assert aligned < mismatched

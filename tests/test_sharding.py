@@ -1,0 +1,120 @@
+"""Sharding plans, LSHS plan optimizer, load estimator, HLO parser."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.sharding.estimator import LoadEstimate, estimate, local_param_numel
+from repro.sharding.hlo import collective_bytes
+from repro.sharding.optimizer import choose_plan
+from repro.sharding.plans import Plan, candidate_plans
+
+MESH_1POD = {"data": 16, "model": 16}
+MESH_2POD = {"pod": 2, "data": 16, "model": 16}
+
+
+class TestEstimator:
+    def test_param_sharding_reduces_local_bytes(self):
+        cfg = get_config("gemma-7b")
+        dp = local_param_numel(cfg, Plan("dp", tp_axis=None), MESH_1POD)
+        tp = local_param_numel(cfg, Plan("tp", tp_axis="model"), MESH_1POD)
+        ftp = local_param_numel(
+            cfg, Plan("ftp", tp_axis="model", fsdp_axis=("data",)), MESH_1POD)
+        assert dp > tp > ftp
+        assert dp == pytest.approx(cfg.param_count(), rel=0.01)
+        # fsdp+tp shards nearly everything across 256 devices
+        assert ftp < cfg.param_count() / 128
+
+    def test_ep_shards_expert_weights(self):
+        cfg = get_config("qwen3-moe-235b-a22b")
+        ep = local_param_numel(
+            cfg, Plan("ep", tp_axis="model", ep=True, fsdp_axis=("data",)), MESH_1POD)
+        assert ep < cfg.param_count() / 100
+
+    def test_memory_terms_scale_with_pod_count(self):
+        cfg = get_config("command-r-35b")
+        plan = Plan("fsdp_tp", tp_axis="model", fsdp_axis=("pod", "data"))
+        e1 = estimate(cfg, plan, MESH_1POD, "train", 256, 4096)
+        e2 = estimate(cfg, plan, MESH_2POD, "train", 256, 4096)
+        assert e2.param_bytes < e1.param_bytes
+
+    def test_cache_sp_bounds_long_context(self):
+        cfg = get_config("gemma3-4b")
+        base = estimate(cfg, Plan("tp", tp_axis="model"), MESH_1POD,
+                        "long", 1, 524288)
+        sp = estimate(cfg, Plan("sp", tp_axis="model", cache_sp=True), MESH_1POD,
+                      "long", 1, 524288)
+        assert sp.cache_bytes < base.cache_bytes
+
+
+class TestPlanOptimizer:
+    def test_rejects_oom_plans(self):
+        """Pure DP cannot hold 35B x (fp32 + Adam) on one chip."""
+        cfg = get_config("command-r-35b")
+        choice = choose_plan(cfg, MESH_1POD, "train", 256, 4096)
+        assert choice.plan.name != "dp"
+        assert choice.est.fits
+
+    def test_moe_plan_fits_and_avoids_einsum_tp(self):
+        """After the §Perf estimator fix: MoE training must land on EP or
+        pure-FSDP — never TP-sharded experts with einsum dispatch (the
+        518 GiB/device pathology, EXPERIMENTS.md §Perf it.1)."""
+        cfg = get_config("phi3.5-moe-42b-a6.6b")
+        choice = choose_plan(cfg, MESH_1POD, "train", 256, 4096)
+        assert choice.est.fits
+        bad = (choice.plan.tp_axis and not choice.plan.ep
+               and choice.plan.dispatch_mode == "einsum")
+        assert not bad, choice.plan
+
+    def test_qwen3_single_pod_infeasible_multi_pod_fits(self):
+        """The honest finding: 235B + fp32 Adam does not fit one v5e pod."""
+        cfg = get_config("qwen3-moe-235b-a22b")
+        single = choose_plan(cfg, MESH_1POD, "train", 256, 4096)
+        multi = choose_plan(cfg, MESH_2POD, "train", 256, 4096)
+        assert not single.est.fits
+        assert multi.est.fits
+
+    def test_decode_plans_fit(self):
+        for arch in ("command-r-35b", "gemma3-4b", "falcon-mamba-7b"):
+            choice = choose_plan(get_config(arch), MESH_1POD, "decode", 128, 32768)
+            assert choice.est.fits, arch
+
+    def test_paper_mode_objective_is_eq2_sum(self):
+        cfg = get_config("gemma3-4b")
+        est = estimate(cfg, Plan("tp", tp_axis="model"), MESH_1POD, "decode", 128, 32768)
+        assert est.objective("paper") == pytest.approx(
+            est.mem_bytes + est.net_in_bytes + est.net_out_bytes)
+
+
+class TestHLOParser:
+    HLO = """
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(%p0), replica_groups={}
+  %ag.1 = bf16[32,128]{1,0} all-gather(bf16[16,128]{1,0} %x), dimensions={0}
+  %rs = f32[4,128]{1,0} reduce-scatter(%p0), dimensions={0}
+  %cp-start = f32[16,128]{1,0} collective-permute-start(%p0)
+  %cp-done = f32[16,128]{1,0} collective-permute-done(%cp-start)
+"""
+
+    def test_counts_and_bytes(self):
+        out = collective_bytes(self.HLO)
+        assert out["n_all-reduce"] == 1
+        assert out["all-reduce"] == 16 * 128 * 4
+        assert out["all-gather"] == 16 * 128 * 2   # inline operand shape
+        assert out["reduce-scatter"] == 16 * 128 * 4
+        assert out["n_collective-permute"] == 1    # -done not double-counted
+        assert out["total"] > 0
+
+    def test_empty_program(self):
+        assert collective_bytes("%x = f32[2]{0} add(%a, %b)")["total"] == 0
+
+
+class TestCandidatePlans:
+    def test_moe_space_includes_ep(self):
+        cfg = get_config("qwen3-moe-235b-a22b")
+        names = {p.name for p in candidate_plans(cfg, "train")}
+        assert any("ep" in n for n in names)
+
+    def test_serving_space_includes_cache_sp(self):
+        cfg = get_config("gemma3-4b")
+        names = {p.name for p in candidate_plans(cfg, "long")}
+        assert "serve_tp_cachesp" in names

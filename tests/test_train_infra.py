@@ -1,0 +1,148 @@
+"""Training infrastructure: optimizer, data determinism, checkpoint/restart
+(fault tolerance), end-to-end resume equivalence."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.launch.train import train_loop
+from repro.train import (
+    AdamConfig,
+    DataConfig,
+    TokenPipeline,
+    adam_update,
+    init_opt_state,
+    lr_at,
+)
+
+
+class TestOptimizer:
+    def test_lr_schedule(self):
+        cfg = AdamConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+        assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+        assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+        assert float(lr_at(cfg, jnp.asarray(100))) == pytest.approx(0.1)
+
+    def test_adam_converges_quadratic(self):
+        cfg = AdamConfig(lr=0.1, warmup_steps=0, total_steps=200, weight_decay=0.0)
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        opt = init_opt_state(params)
+        for _ in range(200):
+            grads = {"w": 2.0 * params["w"]}
+            params, opt, _ = adam_update(cfg, params, grads, opt)
+        assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+    def test_grad_clip(self):
+        cfg = AdamConfig(lr=1e-3, grad_clip=1.0, warmup_steps=0, total_steps=10)
+        params = {"w": jnp.zeros(4)}
+        opt = init_opt_state(params)
+        _, _, metrics = adam_update(cfg, params, {"w": jnp.full(4, 100.0)}, opt)
+        assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+class TestDataPipeline:
+    def test_deterministic_replay(self):
+        cfg = DataConfig(vocab=128, seq_len=16, global_batch=4, seed=7)
+        a = [next(TokenPipeline(cfg, cursor=i)) for i in range(3)]
+        pipe = TokenPipeline(cfg)
+        b = [next(pipe) for _ in range(3)]
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x["tokens"], y["tokens"])
+
+    def test_cursor_restore(self):
+        cfg = DataConfig(vocab=128, seq_len=16, global_batch=4, seed=7)
+        pipe = TokenPipeline(cfg)
+        next(pipe)
+        next(pipe)
+        state = pipe.state()
+        want = next(pipe)
+        resumed = TokenPipeline.restore(cfg, state)
+        got = next(resumed)
+        np.testing.assert_array_equal(want["tokens"], got["tokens"])
+
+    def test_labels_shift(self):
+        cfg = DataConfig(vocab=64, seq_len=16, global_batch=2, corpus="pattern")
+        b = next(TokenPipeline(cfg))
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+                 "opt": {"step": jnp.asarray(5, jnp.int32)}}
+        save(str(tmp_path), 5, state, meta={"data": {"cursor": 2, "seed": 0}})
+        got, meta = restore(str(tmp_path))
+        np.testing.assert_array_equal(got["params"]["w"], np.arange(6.0).reshape(2, 3))
+        assert meta["step"] == 5 and meta["data"]["cursor"] == 2
+
+    def test_keep_n(self, tmp_path):
+        state = {"w": jnp.zeros(2)}
+        for s in (1, 2, 3, 4):
+            save(str(tmp_path), s, state, keep=2)
+        assert latest_step(str(tmp_path)) == 4
+        got, meta = restore(str(tmp_path), step=3)
+        assert meta["step"] == 3
+        with pytest.raises(FileNotFoundError):
+            restore(str(tmp_path) + "/nope")
+
+    def test_atomic_publish(self, tmp_path):
+        """A stale .tmp dir never shadows a published checkpoint."""
+        state = {"w": jnp.zeros(2)}
+        os.makedirs(tmp_path / ".tmp-9")
+        save(str(tmp_path), 9, state)
+        assert latest_step(str(tmp_path)) == 9
+
+
+class TestResumeEquivalence:
+    def test_resume_matches_straight_run(self, tmp_path):
+        """Crash/restart fidelity: 16 steps straight == 8 + resume + 8,
+        including the data stream."""
+        kw = dict(arch="gemma3-4b", batch=4, seq=16, lr=5e-3, seed=3,
+                  schedule_steps=16, log_every=1000, log_fn=lambda *_: None)
+        _, hist_straight = train_loop(steps=16, ckpt_dir=None, **kw)
+        ck = str(tmp_path / "ck")
+        train_loop(steps=8, ckpt_dir=ck, ckpt_every=8, **kw)
+        _, hist_resumed = train_loop(steps=16, ckpt_dir=ck, ckpt_every=8, **kw)
+        np.testing.assert_allclose(
+            hist_straight[8:], hist_resumed, rtol=1e-4, atol=1e-5,
+        )
+
+
+class TestGradientCompression:
+    def test_int8_stochastic_rounding_unbiased(self):
+        from repro.train.compress import dequantize_int8, quantize_int8
+
+        x = jnp.asarray(np.random.default_rng(0).normal(0, 0.1, (512,)),
+                        jnp.float32)
+        keys = jax.random.split(jax.random.PRNGKey(0), 64)
+        acc = jnp.zeros_like(x)
+        for k in keys:
+            q, s = quantize_int8(x, k)
+            acc = acc + dequantize_int8(q, s)
+        mean = acc / len(keys)
+        # E[q(x)] == x up to (quantum / sqrt(trials)) noise
+        quantum = float(jnp.max(jnp.abs(x))) / 127.0
+        assert float(jnp.abs(mean - x).max()) < 4 * quantum / np.sqrt(len(keys)) + 1e-7
+
+    def test_roundtrip_error_bounded_by_quantum(self):
+        from repro.train.compress import compress_tree, decompress_tree
+
+        tree = {"a": jnp.asarray(np.random.default_rng(1).normal(size=(64, 8)),
+                                 jnp.float32),
+                "b": jnp.asarray(np.random.default_rng(2).normal(size=(16,)),
+                                 jnp.float32)}
+        qs, scales = compress_tree(tree, jax.random.PRNGKey(3))
+        back = decompress_tree(qs, scales)
+        for k in tree:
+            quantum = float(jnp.max(jnp.abs(tree[k]))) / 127.0
+            assert float(jnp.abs(back[k] - tree[k]).max()) <= quantum + 1e-7
+
+    def test_compression_ratio(self):
+        from repro.train.compress import compress_tree
+
+        tree = {"w": jnp.zeros((1024,), jnp.float32)}
+        qs, _ = compress_tree(tree, jax.random.PRNGKey(0))
+        assert qs["w"].dtype == jnp.int8  # 4x fewer bytes on the wire
