@@ -13,6 +13,7 @@ import numpy as np
 from repro.core import ArrayContext, ClusterSpec
 from repro.glm import LogisticRegression, overlapping_gaussians
 
+from . import common
 from .common import emit, timeit
 
 K, R = 16, 32
@@ -38,7 +39,7 @@ def run(quick: bool = True) -> None:
     for solver in ("newton", "lbfgs"):
         def fit():
             ctx = ArrayContext(cluster=ClusterSpec(4, 8), node_grid=(4, 1),
-                               backend="numpy")
+                               backend="numpy", pipeline=common.PIPELINE)
             m = LogisticRegression(ctx, solver=solver, max_iter=iters, reg=1e-6)
             m.fit_numpy(X, y, row_blocks=16)
 
@@ -49,7 +50,8 @@ def run(quick: bool = True) -> None:
     loads = {}
     for sched in ("lshs", "dynamic", "roundrobin"):
         ctx = ArrayContext(cluster=ClusterSpec(K, R), node_grid=(K, 1),
-                           scheduler=sched, backend="sim", seed=1)
+                           scheduler=sched, backend="sim", seed=1,
+                           pipeline=common.PIPELINE)
         q = 128
         Xg = ctx.random((1 << 20, 256), grid=(q, 1))
         yg = ctx.random((1 << 20, 1), grid=(q, 1))
@@ -63,7 +65,9 @@ def run(quick: bool = True) -> None:
         loads[sched] = s
         emit(f"logreg.ablation.{sched}", 0.0,
              f"max_mem={int(s['max_mem'])};max_net_in={int(s['max_net_in'])};"
-             f"net_total={int(s['total_net'])}")
+             f"net_total={int(s['total_net'])};"
+             f"mk_sync={s['makespan_sync']:.3e};"
+             f"mk_pipe={s['makespan_pipelined']:.3e}")
     lshs = loads["lshs"]
     for base in ("dynamic", "roundrobin"):
         b = loads[base]

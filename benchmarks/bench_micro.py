@@ -11,10 +11,10 @@ max-memory imbalance.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import ArrayContext, ClusterSpec
+from repro.launch.workloads import logreg_newton_graph
 
+from . import common
 from .common import emit, timeit
 
 K, R = 16, 32            # paper cluster: 16 nodes x 32 workers
@@ -22,10 +22,11 @@ MEAS_N = 1 << 20         # measured-regime elements per array (~8 MB)
 SIM_ROWS = 1 << 14       # simulated-regime logical rows (metadata only)
 
 
-def _ctx(scheduler: str, backend: str, seed=0, ng=None):
+def _ctx(scheduler: str, backend: str, seed=0, ng=None, k=K, r=R):
     return ArrayContext(
-        cluster=ClusterSpec(K, R), node_grid=ng or (K, 1),
+        cluster=ClusterSpec(k, r), node_grid=ng or (k, 1),
         scheduler=scheduler, backend=backend, seed=seed,
+        pipeline=common.PIPELINE,
     )
 
 
@@ -46,21 +47,75 @@ def _operands(ctx, op: str, n_rows: int, d: int = 64, q: int = 64):
 
 def _run_op(ctx, op: str, A, B):
     if op == "X+Y":
-        return (A + B).compute()
-    if op == "sum":
-        return A.sum(axis=0).compute()
-    if op == "X@y":
-        return (A @ B).compute()
-    if op == "X.T@y":
-        return (A.T @ B).compute()
-    if op == "X.T@X":
-        return (A.T @ B).compute()
-    if op == "X@Y.T":
-        return (A @ B.T).compute()
-    raise KeyError(op)
+        out = (A + B).compute()
+    elif op == "sum":
+        out = A.sum(axis=0).compute()
+    elif op == "X@y":
+        out = (A @ B).compute()
+    elif op == "X.T@y":
+        out = (A.T @ B).compute()
+    elif op == "X.T@X":
+        out = (A.T @ B).compute()
+    elif op == "X@Y.T":
+        out = (A @ B.T).compute()
+    else:
+        raise KeyError(op)
+    # pipelined mode: drain the queues inside the timed region, else the
+    # measured row would time enqueueing only while sync mode times execution
+    ctx.flush()
+    return out
 
 
 OPS = ("X+Y", "sum", "X@y", "X.T@y", "X.T@X", "X@Y.T")
+
+
+def _logreg_graph(ctx, n: int, d: int, q: int):
+    """One Newton iteration's expression graph (the Fig. 15 workload)."""
+    logreg_newton_graph(ctx, n, d, q)
+    return ctx
+
+
+def pipeline_ablation(n=1 << 14, d=64, k=4, r=4, emit_rows=True) -> dict:
+    """Sync-vs-pipelined simulated makespan on the logreg workload, per
+    scheduler.  Both clock tracks advance in one scheduled run, so one
+    context yields the whole ablation; n_rfc (the γ dispatch count) rides
+    along for the CI bench-smoke regression gate."""
+    out = {}
+    for sched in ("lshs", "roundrobin", "dynamic"):
+        ctx = _ctx(sched, "sim", seed=1, k=k, r=r)
+        _logreg_graph(ctx, n, d, q=4 * k)
+        s = ctx.state.summary()
+        out[sched] = {
+            "makespan_sync": s["makespan_sync"],
+            "makespan_pipelined": s["makespan_pipelined"],
+            "overlap_speedup": s["overlap_speedup"],
+            "n_rfc": ctx.executor.stats.n_rfc,
+            "total_net": s["total_net"],
+            "max_mem": s["max_mem"],
+        }
+        if emit_rows:
+            emit(
+                f"micro.pipeline.logreg.{sched}", 0.0,
+                f"mk_sync={s['makespan_sync']:.3e};"
+                f"mk_pipe={s['makespan_pipelined']:.3e};"
+                f"overlap={s['overlap_speedup']:.3f}x;"
+                f"n_rfc={ctx.executor.stats.n_rfc}",
+            )
+    return out
+
+
+def smoke() -> dict:
+    """Tiny-grid smoke run for CI: dispatch counts and makespans per
+    scheduler on the logreg graph, plus one measured micro op.  Returns a
+    JSON-able dict (run.py --smoke --json writes it as the CI artifact)."""
+    result = {"pipeline_ablation": pipeline_ablation(
+        n=1 << 12, d=32, k=4, r=2, emit_rows=False)}
+    ctx = _ctx("lshs", "numpy", k=2, r=2)
+    A, B = _operands(ctx, "X+Y", 1 << 10)
+    t = timeit(lambda: _run_op(ctx, "X+Y", A, B), repeats=3)
+    result["measured_add_us"] = t * 1e6
+    result["n_rfc_add"] = ctx.executor.stats.n_rfc
+    return result
 
 
 def run(quick: bool = True) -> None:
@@ -86,6 +141,10 @@ def run(quick: bool = True) -> None:
                 t * 1e6,
                 f"sim_net={int(s['total_net'])};mem_imb={s['mem_imbalance']:.2f}",
             )
+
+    # sync-vs-pipelined dispatch ablation on the logreg workload (Fig. 15
+    # graph): the overlap win LSHS's placement enables
+    pipeline_ablation(n=SIM_ROWS if quick else SIM_ROWS * 4)
 
 
 if __name__ == "__main__":

@@ -7,9 +7,19 @@ are emitted as ``name,us_per_call,derived`` CSV rows.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List
 
 ROWS: List[str] = []
+
+# Dispatch mode for every suite's ArrayContext: False = eager sync dispatch
+# (seed behavior), True = pipelined queues + async drain.  Set once by
+# ``run.py --pipeline`` so the sync-vs-pipelined ablation is one flag.
+PIPELINE: bool = False
+
+
+def set_pipeline(on: bool) -> None:
+    global PIPELINE
+    PIPELINE = bool(on)
 
 
 def timeit(fn: Callable[[], object], repeats: int = 5) -> float:

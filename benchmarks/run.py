@@ -1,14 +1,22 @@
 """Benchmark driver: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+                                            [--pipeline] [--json PATH]
+    PYTHONPATH=src python -m benchmarks.run --smoke --json smoke.json
 
 Emits ``name,us_per_call,derived`` CSV (paper timing protocol: repeats with
-best/worst dropped).  The roofline section reads the dry-run artifact
+best/worst dropped).  ``--pipeline`` runs every suite with the pipelined
+(queued, overlap-aware) executor instead of eager sync dispatch — the
+sync-vs-pipelined x scheduler ablation is this one flag.  ``--smoke`` runs a
+tiny-grid subset (CI's bench-smoke job) and ``--json`` writes the rows plus
+dispatch counts as a machine-readable artifact so per-PR regressions in
+n_rfc/makespan are visible.  The roofline section reads the dry-run artifact
 (benchmarks/artifacts/dryrun.jsonl) produced by ``repro.launch.dryrun``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 from . import (
@@ -22,6 +30,7 @@ from . import (
     bench_qr,
     bench_roofline,
     bench_tensor,
+    common,
 )
 from .common import header
 
@@ -39,13 +48,43 @@ SUITES = {
 }
 
 
+def _write_json(path: str, payload: dict) -> None:
+    payload["rows"] = [
+        dict(zip(("name", "us_per_call", "derived"), r.split(",", 2)))
+        for r in common.ROWS
+    ]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    print(f"# wrote {path}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale repeats")
     ap.add_argument("--only", default=None, choices=list(SUITES))
+    ap.add_argument("--pipeline", action="store_true",
+                    help="pipelined executor (queued dispatch, overlap drain)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-grid CI subset (micro pipeline ablation)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as a JSON artifact")
     args = ap.parse_args()
-    header()
+    common.set_pipeline(args.pipeline)
+    meta = {"pipeline": args.pipeline, "smoke": args.smoke}
     t0 = time.time()
+    if args.smoke:
+        smoke = bench_micro.smoke()
+        print(json.dumps(smoke, indent=2, default=float))
+        # dispatch-count regression gate: the logreg graph's RFC count is a
+        # stable function of the grid; flag drift loudly in the CI log
+        for sched, row in smoke["pipeline_ablation"].items():
+            print(f"# smoke n_rfc[{sched}]={row['n_rfc']} "
+                  f"overlap={row['overlap_speedup']:.3f}x", flush=True)
+        if args.json:
+            _write_json(args.json, {**meta, "smoke_result": smoke})
+        print(f"# total {time.time() - t0:.1f}s", flush=True)
+        return
+    header()
     for name, mod in SUITES.items():
         if args.only and name != args.only:
             continue
@@ -54,6 +93,8 @@ def main() -> None:
             mod.run(quick=not args.full)
         except Exception as ex:  # keep the suite going; record the failure
             print(f"{name}.ERROR,0.0,{type(ex).__name__}:{ex}", flush=True)
+    if args.json:
+        _write_json(args.json, meta)
     print(f"# total {time.time() - t0:.1f}s", flush=True)
 
 

@@ -6,7 +6,7 @@ Public API:
     LSHS / RoundRobinScheduler / DynamicScheduler, ClusterState, CostModel,
     bounds (α-β-γ communication model, Appendix A).
 """
-from .cluster import ClusterState, CostModel, MEM, NET_IN, NET_OUT
+from .cluster import ClusterState, CostModel, WorkerClocks, MEM, NET_IN, NET_OUT
 from .context import ArrayContext
 from .executor import Executor
 from .fusion import fuse_graph
@@ -29,6 +29,7 @@ __all__ = [
     "LSHS",
     "NodeGrid",
     "RoundRobinScheduler",
+    "WorkerClocks",
     "auto_grid",
     "bounds",
     "default_node_grid",

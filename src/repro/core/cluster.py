@@ -9,12 +9,22 @@ after which it is cached by Ray's object store.
 Loads are measured in *array elements* (paper-faithful).  A beyond-paper
 time-normalized objective (seconds, using per-channel bandwidths) is offered
 via ``CostModel`` and is recorded separately in EXPERIMENTS.md.
+
+Beyond the Eq. 2 load matrix, ``ClusterState`` keeps two simulated-time
+clock tracks (``WorkerClocks``): a *sync* track where operand transfers
+serialize on the destination worker (the seed executor's dispatch model) and
+a *pipelined* track where transfers occupy only the per-node link channels
+and may overlap the previous op's compute on that worker (the async runtime
+model of Ray/Dask).  Both tracks advance on every transition, so one
+scheduled run yields the sync-vs-pipelined makespan ablation, and scheduling
+decisions (which consult the pipelined track's finish estimate as a cost
+tie-break) are identical in both executor modes — the property that makes
+pipelined execution bit-identical to sync execution.
 """
 from __future__ import annotations
 
-import copy
-from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -50,6 +60,130 @@ class CostModel:
             + S[:, NET_IN].max() * b / self.link_bw
             + S[:, NET_OUT].max() * b / self.link_bw
         )
+
+    # -- simulated-time channel costs (clock tracks, independent of ``mode``)
+    def transfer_seconds(self, elements: float) -> float:
+        return elements * self.bytes_per_element / self.link_bw
+
+    def compute_seconds(self, elements_touched: float) -> float:
+        """Memory-bound block-op model: time to stream every input and the
+        output through HBM once (roofline floor for elementwise/GEMM tiles)."""
+        return elements_touched * self.bytes_per_element / self.hbm_bw
+
+
+class WorkerClocks:
+    """Per-channel busy-until clocks for one simulated execution timeline.
+
+    Channels: one compute channel per (node, worker), one net-in and one
+    net-out channel per node.  ``overlap=True`` models a pipelined runtime —
+    an operand transfer occupies only the link channels and may proceed while
+    the destination worker computes its previous op.  ``overlap=False``
+    models the synchronous executor: the destination worker blocks while
+    fetching operands, so transfer time lands on its compute chain.
+    """
+
+    def __init__(self, k: int, workers_per_node: int, cost_model: CostModel,
+                 overlap: bool):
+        self.k = k
+        self.workers_per_node = workers_per_node
+        self.cost_model = cost_model
+        self.overlap = overlap
+        self.busy = np.zeros((k, workers_per_node))
+        self.net_in = np.zeros(k)
+        self.net_out = np.zeros(k)
+        self.ready: Dict[int, float] = {}  # obj -> simulated availability time
+
+    def clone(self) -> "WorkerClocks":
+        c = WorkerClocks(self.k, self.workers_per_node, self.cost_model, self.overlap)
+        c.busy = self.busy.copy()
+        c.net_in = self.net_in.copy()
+        c.net_out = self.net_out.copy()
+        c.ready = dict(self.ready)
+        return c
+
+    def reset(self) -> None:
+        self.busy[:] = 0.0
+        self.net_in[:] = 0.0
+        self.net_out[:] = 0.0
+        self.ready.clear()
+
+    def note_alias(self, obj: int, src_obj: int) -> None:
+        """An alias becomes available exactly when its source does."""
+        self.ready[obj] = self.ready.get(src_obj, 0.0)
+
+    def place(
+        self,
+        node: int,
+        worker: int,
+        out_obj: int,
+        work_elements: float,
+        in_objs: Sequence[Tuple[int, int]],
+        xfers: Sequence[Tuple[int, int, float]],
+    ) -> Tuple[float, float]:
+        """Advance the clocks for executing one op on ``(node, worker)``.
+
+        ``in_objs`` is ``[(obj, elements), ...]`` over every operand;
+        ``xfers`` is ``[(src_node, obj, elements), ...]`` over the operands
+        that must be transferred first.  Returns the op's simulated
+        ``(start, finish)``.
+        """
+        cm = self.cost_model
+        t_ready = 0.0
+        for obj, _elements in in_objs:
+            t_ready = max(t_ready, self.ready.get(obj, 0.0))
+        t_xfer = 0.0
+        for src, obj, elements in xfers:
+            t0 = max(self.ready.get(obj, 0.0), self.net_out[src], self.net_in[node])
+            if not self.overlap:
+                t0 = max(t0, self.busy[node, worker])
+            t1 = t0 + cm.transfer_seconds(elements)
+            self.net_out[src] = t1
+            self.net_in[node] = t1
+            if not self.overlap:
+                self.busy[node, worker] = t1
+            t_xfer = max(t_xfer, t1)
+        start = max(self.busy[node, worker], t_ready, t_xfer)
+        end = start + cm.compute_seconds(work_elements)
+        self.busy[node, worker] = end
+        self.ready[out_obj] = end
+        return start, end
+
+    def estimate_finish(
+        self,
+        node: int,
+        work_elements: float,
+        in_objs: Sequence[Tuple[int, int]],
+        xfers: Sequence[Tuple[int, int, float]],
+        worker: Optional[int] = None,
+    ) -> float:
+        """Non-mutating ``place``: the finish time a hypothetical placement
+        would reach.  ``worker=None`` assumes the node's earliest-free worker
+        (the optimistic choice ``pick_worker`` rotates toward)."""
+        cm = self.cost_model
+        w_busy = self.busy[node, worker] if worker is not None else float(
+            self.busy[node].min())
+        t_ready = 0.0
+        for obj, _elements in in_objs:
+            t_ready = max(t_ready, self.ready.get(obj, 0.0))
+        t_xfer = 0.0
+        net_out = {}
+        net_in = self.net_in[node]
+        for src, obj, elements in xfers:
+            t0 = max(self.ready.get(obj, 0.0), net_out.get(src, self.net_out[src]),
+                     net_in)
+            if not self.overlap:
+                t0 = max(t0, w_busy)
+            t1 = t0 + cm.transfer_seconds(elements)
+            net_out[src] = t1
+            net_in = t1
+            if not self.overlap:
+                w_busy = t1
+            t_xfer = max(t_xfer, t1)
+        start = max(w_busy, t_ready, t_xfer)
+        return start + cm.compute_seconds(work_elements)
+
+    def makespan(self) -> float:
+        return float(self.busy.max()) if self.busy.size else 0.0
 
 
 @dataclass
@@ -90,6 +224,12 @@ class ClusterState:
         self.cost_model = cost_model or CostModel()
         self.transfers: List[TransferRecord] = []
         self._worker_rr: List[int] = [0] * self.k
+        # dual simulated-time tracks: sync (serialized fetch) vs pipelined
+        # (transfer/compute overlap).  Both advance on every transition so a
+        # single scheduled run yields the full overlap ablation.
+        w = cluster.workers_per_node
+        self.clocks_sync = WorkerClocks(self.k, w, self.cost_model, overlap=False)
+        self.clocks_pipe = WorkerClocks(self.k, w, self.cost_model, overlap=True)
 
     # -- bookkeeping -------------------------------------------------------
     def clone(self) -> "ClusterState":
@@ -105,15 +245,27 @@ class ClusterState:
         c.cost_model = self.cost_model
         c.transfers = []  # clones are what-if simulations; don't carry history
         c._worker_rr = list(self._worker_rr)
+        c.clocks_sync = self.clocks_sync.clone()
+        c.clocks_pipe = self.clocks_pipe.clone()
         return c
 
-    def add_object(self, obj: int, node: int, worker: int, elements: int) -> None:
-        """Register a freshly created object placed on (node, worker)."""
+    def add_object(
+        self, obj: int, node: int, worker: int, elements: int,
+        ready_of: Optional[int] = None,
+    ) -> None:
+        """Register a freshly created object placed on (node, worker).
+
+        ``ready_of`` marks the object as an alias of an existing one for the
+        clock tracks: it becomes available when its source does, rather than
+        at time zero (reduce outputs alias their last partial)."""
         self.M.setdefault(obj, set()).add(node)
         self.Mw.setdefault(obj, set()).add((node, worker))
         self.home[obj] = (node, worker)
         self.obj_size[obj] = int(elements)
         self.S[node, MEM] += elements
+        if ready_of is not None:
+            self.clocks_sync.note_alias(obj, ready_of)
+            self.clocks_pipe.note_alias(obj, ready_of)
 
     def nodes_of(self, obj: int) -> Set[int]:
         return self.M.get(obj, set())
@@ -131,12 +283,14 @@ class ClusterState:
         out_elements: int,
         inputs: Sequence[int],
         worker: Optional[int] = None,
-    ) -> None:
+    ) -> Tuple[float, float]:
         """Simulate executing an op on ``node``: transfer any non-resident
         inputs (charging net-out at a source and net-in at ``node``), then
-        account the output's memory on ``node``."""
+        account the output's memory on ``node``.  Advances both clock tracks
+        and returns the op's (start, finish) on the *pipelined* track."""
         if worker is None:
             worker = self.pick_worker(node)
+        xfers: List[Tuple[int, int, float]] = []  # (src, obj, elements)
         for obj in inputs:
             holders = self.M.get(obj)
             if holders is None:
@@ -154,6 +308,7 @@ class ClusterState:
                         self.transfers.append(
                             TransferRecord(obj, node, node, int(size), intra_node=True)
                         )
+                        xfers.append((node, obj, size))
                 continue
             # choose the least net-out-loaded holder as the source
             src = min(holders, key=lambda h: (self.S[h, NET_OUT], h))
@@ -165,7 +320,12 @@ class ClusterState:
             holders.add(node)
             self.Mw.setdefault(obj, set()).add((node, worker))
             self.transfers.append(TransferRecord(obj, src, node, size))
+            xfers.append((src, obj, size))
         self.add_object(out_obj, node, worker, out_elements)
+        in_objs = [(obj, self.obj_size[obj]) for obj in inputs]
+        work = out_elements + sum(e for _o, e in in_objs)
+        self.clocks_sync.place(node, worker, out_obj, work, in_objs, xfers)
+        return self.clocks_pipe.place(node, worker, out_obj, work, in_objs, xfers)
 
     def simulate_cost(
         self,
@@ -183,13 +343,16 @@ class ClusterState:
         out_elements: int,
         inputs: Sequence[int],
         worker: Optional[int] = None,
-    ) -> Tuple[float, float, float]:
-        """(Eq.2 objective, transfer elements, node load) for a hypothetical
-        placement — the trailing entries are LSHS tie-breakers (the paper
-        leaves ties unspecified; minimizing transferred bytes among
-        equal-objective options is the communication-avoiding choice)."""
+    ) -> Tuple[float, float, float, float]:
+        """(Eq.2 objective, transfer elements, est. finish, node load) for a
+        hypothetical placement — the trailing entries are LSHS tie-breakers
+        (the paper leaves ties unspecified).  Among equal-objective options,
+        minimizing transferred bytes is the communication-avoiding choice;
+        among those, the earliest *pipelined* finish estimate prefers nodes
+        whose workers and links free up soonest (overlap-aware)."""
         S = self.S.copy()
         moved = 0.0
+        xfers: List[Tuple[int, int, float]] = []
         for obj in inputs:
             holders = self.M.get(obj, set())
             if node in holders:
@@ -199,6 +362,7 @@ class ClusterState:
                         S[node, NET_OUT] += size
                         S[node, NET_IN] += size
                         moved += size
+                        xfers.append((node, obj, size))
                 continue
             src = min(holders, key=lambda h: (S[h, NET_OUT], h))
             size = self.obj_size[obj]
@@ -206,17 +370,33 @@ class ClusterState:
             S[node, NET_IN] += size
             S[node, MEM] += size  # §5.1: transmission adds memory at dst
             moved += size
+            xfers.append((src, obj, size))
         S[node, MEM] += out_elements
-        return self.cost_model.objective(S), moved, float(S[node].sum())
+        in_objs = [(obj, self.obj_size[obj]) for obj in inputs]
+        work = out_elements + sum(e for _o, e in in_objs)
+        est_finish = self.clocks_pipe.estimate_finish(
+            node, work, in_objs, xfers, worker=worker)
+        return self.cost_model.objective(S), moved, est_finish, float(S[node].sum())
 
     def objective(self) -> float:
         return self.cost_model.objective(self.S)
+
+    def makespan(self, pipeline: bool = True) -> float:
+        """Simulated completion time of everything scheduled so far, under
+        the pipelined (overlapped) or sync (serialized-fetch) model."""
+        return (self.clocks_pipe if pipeline else self.clocks_sync).makespan()
+
+    def reset_clocks(self) -> None:
+        self.clocks_sync.reset()
+        self.clocks_pipe.reset()
 
     # -- reporting -----------------------------------------------------------
     def network_elements(self) -> int:
         return int(sum(t.elements for t in self.transfers))
 
     def summary(self) -> Dict[str, float]:
+        mk_sync = self.makespan(pipeline=False)
+        mk_pipe = self.makespan(pipeline=True)
         return {
             "max_mem": float(self.S[:, MEM].max()),
             "max_net_in": float(self.S[:, NET_IN].max()),
@@ -224,4 +404,7 @@ class ClusterState:
             "total_net": float(self.S[:, NET_IN].sum()),
             "mem_imbalance": float(self.S[:, MEM].max() / max(self.S[:, MEM].mean(), 1e-12)),
             "objective": self.objective(),
+            "makespan_sync": mk_sync,
+            "makespan_pipelined": mk_pipe,
+            "overlap_speedup": mk_sync / max(mk_pipe, 1e-12),
         }

@@ -36,6 +36,7 @@ class ArrayContext:
         cost_model: Optional[CostModel] = None,
         seed: int = 0,
         fuse: bool = False,
+        pipeline: bool = False,
     ):
         self.cluster = cluster
         if node_grid is None:
@@ -46,7 +47,8 @@ class ArrayContext:
             raise ValueError("node_grid must factor the cluster's node count")
         self.node_grid = node_grid
         self.state = ClusterState(cluster, cost_model=cost_model, system=system)
-        self.executor = Executor(mode=backend, seed=seed)
+        self.pipeline = pipeline
+        self.executor = Executor(mode=backend, seed=seed, pipeline=pipeline)
         self.scheduler = (
             scheduler
             if isinstance(scheduler, SchedulerBase)
@@ -144,16 +146,25 @@ class ArrayContext:
             v.meta["dest"] = node
             stack.extend(v.children)
 
+    # -- pipelined dispatch -----------------------------------------------------
+    def flush(self) -> int:
+        """Drain any pending pipelined ops (no-op for the sync executor).
+        Returns the number of ops executed."""
+        return self.executor.flush()
+
     # -- reporting ------------------------------------------------------------------
     def loads(self) -> Dict[str, float]:
         d = self.state.summary()
         d["n_rfc"] = self.executor.stats.n_rfc
         d["transfers"] = self.state.network_elements()
+        d["makespan"] = self.state.makespan(pipeline=self.pipeline)
+        d["pending_ops"] = self.executor.pending_count()
         return d
 
     def reset_loads(self) -> None:
-        """Zero the load counters (keep residency maps) — used between
-        benchmark phases to isolate per-expression loads."""
+        """Zero the load counters and simulated clocks (keep residency maps)
+        — used between benchmark phases to isolate per-expression loads."""
         self.state.S[:] = 0.0
         self.state.transfers.clear()
+        self.state.reset_clocks()
         self.executor.stats.reset()

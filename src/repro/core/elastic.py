@@ -29,6 +29,8 @@ def elastic_relayout(
     the old executor's block storage (object-store survivors move by
     reference; real systems would transfer bytes — the count is the schedule).
     """
+    # quiesce pipelined dispatch: blocks must be materialized before re-homing
+    old_ctx.executor.flush()
     new_ctx = ArrayContext(
         cluster=new_cluster,
         node_grid=new_node_grid,
@@ -36,6 +38,7 @@ def elastic_relayout(
         backend=old_ctx.executor.mode,
         system=old_ctx.state.system,
         seed=old_ctx._seed,
+        pipeline=old_ctx.pipeline,
     )
     # share physical storage: the object store outlives the re-plan
     new_ctx.executor = old_ctx.executor

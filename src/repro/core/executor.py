@@ -10,15 +10,30 @@ Three backends share one interface:
   ``jax.device_put``; placements map node->device.  Degenerates gracefully to
   one device; used by the subprocess mesh tests with fake devices.
 
+Two dispatch modes share one interface:
+
+* sync (``pipeline=False``) — ``run_op`` executes eagerly at schedule time,
+  the seed behavior.
+* pipelined (``pipeline=True``) — ``run_op`` enqueues a ``PendingOp`` future
+  onto the per-(node, worker) dispatch queue and returns immediately; a
+  simulated-time event loop (``flush``) later drains the queues in earliest-
+  finish order, the order an async runtime that overlaps operand transfers
+  with compute would retire them (the clock model lives in
+  ``cluster.WorkerClocks``).  Because block ops are pure and dependencies are
+  respected, drain order never changes values: pipelined results are
+  bit-identical to sync results.  ``assemble``/``get`` flush on demand.
+
 The executor also implements task-lineage replay for fault tolerance
 (``fail_node``/``recover``): every op's recipe is recorded so lost blocks can
 be re-executed idempotently — the GraphArray analogue of checkpoint/restart.
+Pending queues are flushed before a failure is injected or a replay starts,
+so lineage always reflects a quiesced system.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -32,6 +47,20 @@ class OpRecord:
     meta: Dict[str, Any]
     in_ids: Tuple[int, ...]
     placement: Tuple[int, int]
+    times: Optional[Tuple[float, float]] = None  # simulated (start, finish)
+
+
+@dataclass
+class PendingOp:
+    """A dispatched-but-not-executed block op: the executor's future."""
+
+    out_id: int
+    op: str
+    meta: Dict[str, Any]
+    in_ids: Tuple[int, ...]
+    placement: Tuple[int, int]
+    eta: float  # simulated finish time (event-loop drain priority)
+    seq: int    # dispatch order (deterministic tie-break)
 
 
 @dataclass
@@ -39,18 +68,31 @@ class ExecStats:
     n_rfc: int = 0          # remote function calls dispatched (the γ term)
     n_creates: int = 0
     elements_computed: int = 0
+    n_queued: int = 0       # ops that went through the pipelined queues
+    n_flushes: int = 0      # event-loop drains
+    peak_queue: int = 0     # max total ops pending at once
 
     def reset(self) -> None:
         self.n_rfc = 0
         self.n_creates = 0
         self.elements_computed = 0
+        self.n_queued = 0
+        self.n_flushes = 0
+        self.peak_queue = 0
 
 
 class Executor:
-    def __init__(self, mode: str = "numpy", seed: int = 0, devices: Optional[list] = None):
+    def __init__(
+        self,
+        mode: str = "numpy",
+        seed: int = 0,
+        devices: Optional[list] = None,
+        pipeline: bool = False,
+    ):
         if mode not in ("numpy", "sim", "jax"):
             raise ValueError(f"unknown executor mode {mode!r}")
         self.mode = mode
+        self.pipeline = pipeline
         self.store: Dict[int, Any] = {}
         self.shapes: Dict[int, Tuple[int, ...]] = {}
         self.aliases: Dict[int, int] = {}
@@ -59,6 +101,11 @@ class Executor:
         self.stats = ExecStats()
         self.rng = np.random.default_rng(seed)
         self._devices = devices
+        # pipelined dispatch state: per-(node, worker) FIFO queues plus the
+        # set of output ids whose values are still futures
+        self.queues: Dict[Tuple[int, int], Deque[PendingOp]] = {}
+        self._pending_ids: set = set()
+        self._seq = 0
         if mode == "jax":
             import jax
 
@@ -112,7 +159,10 @@ class Executor:
         return vid
 
     def get(self, vid: int):
-        return self.store[self.resolve(vid)]
+        vid = self.resolve(vid)
+        if vid in self._pending_ids:
+            self.flush()
+        return self.store[vid]
 
     def run_op(
         self,
@@ -121,9 +171,15 @@ class Executor:
         meta: Dict[str, Any],
         in_ids: Sequence[int],
         placement: Tuple[int, int],
+        eta: Optional[Tuple[float, float]] = None,
     ) -> None:
+        """Dispatch one block op.  ``eta`` is the scheduler's simulated
+        (start, finish) for the op (from ``ClusterState.transition``); in
+        pipelined mode it orders the event-loop drain."""
         self.stats.n_rfc += 1
-        self.lineage[out_id] = OpRecord(out_id, op, dict(meta), tuple(in_ids), placement)
+        self.lineage[out_id] = OpRecord(
+            out_id, op, dict(meta), tuple(in_ids), placement, times=eta
+        )
         self.block_home[out_id] = placement
         in_shapes = [self.shapes[self.resolve(i)] for i in in_ids]
         out_shape = infer_shape(op, meta, in_shapes)
@@ -131,10 +187,66 @@ class Executor:
         if self.mode == "sim":
             self.store[out_id] = None
             return
+        if self.pipeline:
+            pending = PendingOp(
+                out_id, op, dict(meta), tuple(in_ids), placement,
+                eta=eta[1] if eta else 0.0, seq=self._seq,
+            )
+            self._seq += 1
+            self.queues.setdefault(placement, deque()).append(pending)
+            self._pending_ids.add(out_id)
+            self.stats.n_queued += 1
+            self.stats.peak_queue = max(self.stats.peak_queue, len(self._pending_ids))
+            return
+        self._execute(out_id, op, meta, in_ids, placement)
+
+    def _execute(
+        self,
+        out_id: int,
+        op: str,
+        meta: Dict[str, Any],
+        in_ids: Sequence[int],
+        placement: Tuple[int, int],
+    ) -> None:
         ins = [np.asarray(self.get(i)) for i in in_ids]
         out = execute_block_op(op, meta, ins)
+        out_shape = self.shapes[out_id]
         self.stats.elements_computed += int(np.prod(out_shape)) if out_shape else 1
         self.store[out_id] = self._commit(out, placement)
+
+    def pending_count(self) -> int:
+        return len(self._pending_ids)
+
+    def flush(self) -> int:
+        """Drain the dispatch queues: an event loop that repeatedly retires,
+        among queue heads whose operands are materialized, the one with the
+        earliest simulated finish time.  FIFO order per worker is preserved
+        (a worker is a serial resource); the scheduler's topological dispatch
+        order guarantees progress.  Returns the number of ops executed."""
+        executed = 0
+        while self._pending_ids:
+            head: Optional[PendingOp] = None
+            for q in self.queues.values():
+                if not q:
+                    continue
+                cand = q[0]
+                if any(self.resolve(i) in self._pending_ids for i in cand.in_ids):
+                    continue
+                if head is None or (cand.eta, cand.seq) < (head.eta, head.seq):
+                    head = cand
+            if head is None:  # pragma: no cover - topological order precludes this
+                raise RuntimeError(
+                    f"pipelined executor deadlock: {len(self._pending_ids)} ops "
+                    "pending but no queue head is ready"
+                )
+            self.queues[head.placement].popleft()
+            # retire before executing: _execute->get must not re-enter flush
+            self._pending_ids.discard(head.out_id)
+            self._execute(head.out_id, head.op, head.meta, head.in_ids, head.placement)
+            executed += 1
+        if executed:
+            self.stats.n_flushes += 1
+        return executed
 
     def alias(self, new_id: int, old_id: int) -> None:
         self.aliases[new_id] = old_id
@@ -145,6 +257,7 @@ class Executor:
     def assemble(self, ga: GraphArray) -> np.ndarray:
         if self.mode == "sim":
             raise RuntimeError("sim executor holds no data")
+        self.flush()
         out = np.zeros(ga.shape)
         if ga.ndim == 0:
             return np.asarray(self.get(ga.block(()).vid))
@@ -155,7 +268,12 @@ class Executor:
 
     # -- fault tolerance: lineage replay ------------------------------------------
     def fail_node(self, node: int) -> List[int]:
-        """Drop every block whose home is ``node`` (simulated node failure)."""
+        """Drop every block whose home is ``node`` (simulated node failure).
+        Pending queues are flushed first: in-flight futures either complete
+        before the failure or are lost with the node and replayed from
+        lineage — flushing picks the former, keeping replay bookkeeping
+        exact."""
+        self.flush()
         lost = [
             vid
             for vid, (n, _w) in self.block_home.items()
@@ -168,6 +286,7 @@ class Executor:
     def recover(self, vids: Sequence[int]) -> int:
         """Recompute lost blocks from lineage (topological replay).  Returns
         the number of re-executed tasks."""
+        self.flush()
         replayed = 0
 
         def ensure(vid: int) -> None:

@@ -85,8 +85,8 @@ class SchedulerBase:
         in_ids = [c.vid for c in v.children]
         if worker is None:
             worker = state.pick_worker(node)
-        state.transition(node, v.vid, v.elements, in_ids, worker=worker)
-        executor.run_op(v.vid, v.op, v.meta, in_ids, (node, worker))
+        eta = state.transition(node, v.vid, v.elements, in_ids, worker=worker)
+        executor.run_op(v.vid, v.op, v.meta, in_ids, (node, worker), eta=eta)
         return node, worker
 
     def _placement_options(self, v: Vertex, state: ClusterState) -> List[int]:
@@ -153,14 +153,16 @@ class SchedulerBase:
             only = v.children[0]
             # alias: the reduce's output is its single remaining child
             executor.alias(v.vid, only.vid)
-            state.add_object(v.vid, only.placement[0], only.placement[1], v.elements)
+            state.add_object(v.vid, only.placement[0], only.placement[1],
+                             v.elements, ready_of=only.vid)
             v.to_leaf(*only.placement)
 
     def _finalize_reduce(self, v, forced, state, executor, rng) -> None:
         if len(v.children) == 1:
             only = v.children[0]
             executor.alias(v.vid, only.vid)
-            state.add_object(v.vid, only.placement[0], only.placement[1], v.elements)
+            state.add_object(v.vid, only.placement[0], only.placement[1],
+                             v.elements, ready_of=only.vid)
             v.to_leaf(*only.placement)
             return
         if v.vid in forced:
@@ -177,7 +179,10 @@ class SchedulerBase:
 
 class LSHS(SchedulerBase):
     """Load Simulated Hierarchical Scheduling (Alg. 1): greedy argmin of the
-    Eq. 2 objective over the vertex's placement options.
+    Eq. 2 objective over the vertex's placement options.  Ties are broken by
+    least transferred bytes, then by earliest estimated finish time on the
+    pipelined clock track (overlap-aware: prefers nodes whose workers and
+    links free up soonest), then by least node load.
 
     ``dest_hint=True`` (beyond-paper, "LSHS+") additionally offers each
     algebra/reduce vertex its output subgraph's final layout node as a

@@ -67,14 +67,23 @@ def simulate_makespan(
     return SimResult(float(finish.max()), finish, duplicated)
 
 
-def context_task_profile(ctx, element_rate: float = 1e9) -> tuple:
+def context_task_profile(ctx, element_rate: float = 1e9,
+                         use_sim_times: bool = False) -> tuple:
     """Extract (placements, costs) from an executed ArrayContext's lineage:
-    cost = output elements / element_rate (compute-proportional model)."""
+    cost = output elements / element_rate (compute-proportional model).
+
+    With ``use_sim_times=True``, per-task costs come from the scheduler's
+    overlap-aware clock trace instead (``OpRecord.times``, seconds of
+    simulated pipelined wall time including any serialized transfer wait) —
+    stragglers then inflate the same durations the makespan model charges."""
     placements, costs = [], []
     for rec in ctx.executor.lineage.values():
         if rec.op.startswith("create:"):
             continue
         placements.append(rec.placement[0])
+        if use_sim_times and rec.times is not None:
+            costs.append(max(rec.times[1] - rec.times[0], 1e-12))
+            continue
         shape = ctx.executor.shapes[rec.out_id]
         costs.append(max(float(np.prod(shape)) if shape else 1.0, 1.0) / element_rate)
     return placements, costs

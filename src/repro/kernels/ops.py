@@ -12,11 +12,14 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
 
-from .flash_attention import flash_attention_pallas
-from .glm_fused import glm_fused_pallas
-from .mamba_scan import mamba_scan_pallas
-from .matmul import matmul_pallas
+# Version-compat shim: jax renamed TPUCompilerParams -> CompilerParams (and
+# back) across releases.  Every Pallas kernel imports the name from here; the
+# kernel modules are imported lazily below (at trace time) so they can.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
 
 
 def _on_tpu() -> bool:
@@ -36,6 +39,8 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def matmul(a, b, *, bm: int = 512, bn: int = 1024, bk: int = 512,
            interpret: Optional[bool] = None):
+    from .matmul import matmul_pallas
+
     interpret = (not _on_tpu()) if interpret is None else interpret
     M, K = a.shape
     _, N = b.shape
@@ -51,6 +56,8 @@ def matmul(a, b, *, bm: int = 512, bn: int = 1024, bk: int = 512,
 def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
                     q_offset: int = 0, bq: int = 512, bk: int = 512,
                     interpret: Optional[bool] = None):
+    from .flash_attention import flash_attention_pallas
+
     interpret = (not _on_tpu()) if interpret is None else interpret
     B, H, Sq, hd = q.shape
     Skv = k.shape[2]
@@ -72,6 +79,8 @@ def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = Non
 @functools.partial(jax.jit, static_argnames=("bd", "chunk", "interpret"))
 def mamba_scan(dA, dBx, C, *, bd: int = 512, chunk: int = 64,
                interpret: Optional[bool] = None):
+    from .mamba_scan import mamba_scan_pallas
+
     interpret = (not _on_tpu()) if interpret is None else interpret
     B, S, DI, N = dA.shape
     chunk_ = min(chunk, S)
@@ -89,6 +98,8 @@ def mamba_scan(dA, dBx, C, *, bd: int = 512, chunk: int = 64,
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def glm_fused(z, y, *, bm: int = 1024, interpret: Optional[bool] = None):
+    from .glm_fused import glm_fused_pallas
+
     interpret = (not _on_tpu()) if interpret is None else interpret
     n, d = z.shape
     bm_ = min(bm, n)

@@ -1,0 +1,40 @@
+"""Canonical demo workload graphs.
+
+One definition of the logreg Newton-iteration graph (the Fig. 15 workload)
+and the dense square matmul, shared by the launch driver
+(``repro.launch.blocks``), the benchmarks (``benchmarks.bench_micro``), and
+the pipeline tests — so all three exercise the *same* expression graph and a
+change to the canonical workload lands everywhere at once.
+"""
+from __future__ import annotations
+
+from repro.core import ArrayContext
+
+
+def logreg_newton_graph(ctx: ArrayContext, n: int, d: int, q: int,
+                        reset_loads: bool = True):
+    """One Newton iteration of logistic regression on an (n, d) design matrix
+    split into q row blocks.  Returns the (gradient, Hessian) GraphArrays.
+
+    ``reset_loads`` zeroes the load counters and simulated clocks after the
+    operands are created, so reported loads cover the iteration only.
+    """
+    X = ctx.random((n, d), grid=(q, 1))
+    y = ctx.random((n, 1), grid=(q, 1))
+    beta = ctx.zeros((d, 1), grid=(1, 1))
+    if reset_loads:
+        ctx.reset_loads()
+    mu = (X @ beta).sigmoid().compute()
+    g = (X.T @ (mu - y)).compute()
+    w = (mu * (1.0 - mu)).compute()
+    H = (X.T @ (w * X).compute()).compute()
+    return g, H
+
+
+def dgemm_graph(ctx: ArrayContext, dim: int, g: int, reset_loads: bool = True):
+    """Dense square (dim, dim) matmul on a (g, g) block grid."""
+    A = ctx.random((dim, dim), grid=(g, g))
+    B = ctx.random((dim, dim), grid=(g, g))
+    if reset_loads:
+        ctx.reset_loads()
+    return (A @ B).compute()

@@ -47,8 +47,10 @@ def summa_matmul(ctx: ArrayContext, A: GraphArray, B: GraphArray) -> GraphArray:
                 meta = {"ta": False, "tb": False}
                 mm = Vertex("op", "matmul", infer_shape("matmul", meta, [ca.shape, cb.shape]),
                             [ca, cb], meta)
-                state.transition(node, mm.vid, mm.elements, [ca.vid, cb.vid], worker=worker)
-                ex.run_op(mm.vid, "matmul", meta, [ca.vid, cb.vid], (node, worker))
+                eta = state.transition(node, mm.vid, mm.elements, [ca.vid, cb.vid],
+                                       worker=worker)
+                ex.run_op(mm.vid, "matmul", meta, [ca.vid, cb.vid], (node, worker),
+                          eta=eta)
                 mm.to_leaf(node, worker)
                 if (i, j) not in acc:
                     acc[(i, j)] = mm
@@ -57,8 +59,10 @@ def summa_matmul(ctx: ArrayContext, A: GraphArray, B: GraphArray) -> GraphArray:
                     add = Vertex("op", "add", mm.shape, [prev, mm])
                     # in-place accumulate: output reuses the buffer -> no new
                     # memory charge beyond the partial just produced
-                    state.transition(node, add.vid, 0, [prev.vid, mm.vid], worker=worker)
-                    ex.run_op(add.vid, "add", {}, [prev.vid, mm.vid], (node, worker))
+                    eta = state.transition(node, add.vid, 0, [prev.vid, mm.vid],
+                                           worker=worker)
+                    ex.run_op(add.vid, "add", {}, [prev.vid, mm.vid], (node, worker),
+                              eta=eta)
                     add.to_leaf(node, worker)
                     acc[(i, j)] = add
     for (i, j), v in acc.items():
