@@ -46,6 +46,25 @@ def run(quick: bool = True) -> None:
         t = timeit(fit, repeats=3 if quick else 7)
         emit(f"logreg.{solver}", t * 1e6, f"vs_numpy={t / t_np:.2f}x")
 
+    # plan cache on the iterative Newton fit: identical fit, iteration 2+
+    # replays iteration 1's placement plans instead of re-running LSHS
+    last_ctx = []
+
+    def fit_cached():
+        ctx = ArrayContext(cluster=ClusterSpec(4, 8), node_grid=(4, 1),
+                           backend="numpy", pipeline=common.PIPELINE,
+                           plan_cache=True)
+        m = LogisticRegression(ctx, solver="newton", max_iter=iters, reg=1e-6)
+        m.fit_numpy(X, y, row_blocks=16)
+        last_ctx[:] = [ctx]
+
+    t_cached = timeit(fit_cached, repeats=3 if quick else 7)
+    st = last_ctx[0].sched_stats
+    emit("logreg.newton.plan_cache", t_cached * 1e6,
+         f"vs_numpy={t_cached / t_np:.2f}x;"
+         f"hits={st.plan_hits};misses={st.plan_misses};"
+         f"sched_overhead_us={st.scheduling_overhead_s * 1e6:.0f}")
+
     # Fig. 15 ablation at paper scale (simulated loads, one Newton iteration)
     loads = {}
     for sched in ("lshs", "dynamic", "roundrobin"):

@@ -106,8 +106,12 @@ def pipeline_ablation(n=1 << 14, d=64, k=4, r=4, emit_rows=True) -> dict:
 
 def smoke() -> dict:
     """Tiny-grid smoke run for CI: dispatch counts and makespans per
-    scheduler on the logreg graph, plus one measured micro op.  Returns a
-    JSON-able dict (run.py --smoke --json writes it as the CI artifact)."""
+    scheduler on the logreg graph, one measured micro op, and the plan-cache
+    scheduler-overhead comparison (hit rate + cached-vs-cold speedup), so
+    scheduling-time regressions are visible per-PR.  Returns a JSON-able
+    dict (run.py --smoke --json writes it as the CI artifact)."""
+    from . import bench_overhead
+
     result = {"pipeline_ablation": pipeline_ablation(
         n=1 << 12, d=32, k=4, r=2, emit_rows=False)}
     ctx = _ctx("lshs", "numpy", k=2, r=2)
@@ -115,6 +119,8 @@ def smoke() -> dict:
     t = timeit(lambda: _run_op(ctx, "X+Y", A, B), repeats=3)
     result["measured_add_us"] = t * 1e6
     result["n_rfc_add"] = ctx.executor.stats.n_rfc
+    result["plan_cache"] = bench_overhead.plan_cache_comparison(
+        quick=True, emit_rows=False)
     return result
 
 

@@ -5,12 +5,21 @@
 the gap between executing -x through the executor vs raw numpy.  The fusion
 pass (beyond-paper; §9 future work) is measured as the γ reduction on a
 3-op elementwise chain.
+
+The plan-cache section splits the per-op cost into *scheduler time* (frontier
+management, option enumeration, cost simulation, fingerprinting — everything
+the structural plan cache can amortize) vs *dispatch time* (transition +
+run_op, paid on every path), and compares a cached 10-iteration Newton loop
+against a cold one (sim backend: scheduling cost only, no block math).
 """
 from __future__ import annotations
+
+import gc
 
 import numpy as np
 
 from repro.core import ArrayContext, ClusterSpec
+from repro.launch.workloads import logreg_newton_loop
 
 from .common import emit, timeit
 
@@ -47,6 +56,55 @@ def run(quick: bool = True) -> None:
         (1.0 - X.sigmoid().square()).compute()
         rfcs = ctx.executor.stats.n_rfc - n0
         emit(f"overhead.fusion.{'on' if fuse else 'off'}", 0.0, f"rfcs={rfcs}")
+
+    plan_cache_comparison(quick=quick)
+
+
+def plan_cache_comparison(quick: bool = True, iters: int = 10,
+                          repeats: int = 3, emit_rows: bool = True) -> dict:
+    """Cached-vs-cold scheduling cost on the iterative Newton loop.
+
+    Per mode: scheduler time (scheduling overhead the plan cache amortizes)
+    vs dispatch time (transition + run_op, identical work on both paths),
+    best of ``repeats`` runs (gc paused for stable timing).  Returns the
+    rows plus the headline ``overhead_speedup`` — the ≥5x target of the
+    plan-cache PR — as a dict (also used by the CI bench-smoke artifact).
+    """
+    n, d, q, k, r = ((1 << 15, 32, 64, 16, 4) if quick
+                     else (1 << 16, 64, 128, 16, 8))
+    out = {}
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for cache in (False, True):
+            best = None
+            for _ in range(max(repeats, 1)):
+                gc.collect()
+                ctx = ArrayContext(cluster=ClusterSpec(k, r), node_grid=(k, 1),
+                                   backend="sim", seed=0, plan_cache=cache)
+                logreg_newton_loop(ctx, n=n, d=d, q=q, iters=iters)
+                st = ctx.sched_stats
+                if best is None or st.scheduling_overhead_s < best["sched_overhead_s"]:
+                    best = st.as_dict()
+            out["on" if cache else "off"] = best
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    speedup = out["off"]["sched_overhead_s"] / max(out["on"]["sched_overhead_s"], 1e-12)
+    out["overhead_speedup"] = speedup
+    out["hit_rate"] = out["on"]["plan_hit_rate"]
+    if emit_rows:
+        for mode in ("off", "on"):
+            row = out[mode]
+            emit(f"overhead.plan_cache.{mode}", row["sched_overhead_s"] * 1e6,
+                 f"sched_us={row['sched_overhead_s'] * 1e6:.0f};"
+                 f"dispatch_us={row['dispatch_s'] * 1e6:.0f};"
+                 f"fingerprint_us={row['fingerprint_s'] * 1e6:.0f};"
+                 f"hits={row['plan_hits']};misses={row['plan_misses']}")
+        emit("overhead.plan_cache.speedup", 0.0,
+             f"sched_overhead={speedup:.2f}x;iters={iters};"
+             f"hit_rate={out['hit_rate']:.3f}")
+    return out
 
 
 if __name__ == "__main__":

@@ -80,6 +80,11 @@ def main() -> None:
         for sched, row in smoke["pipeline_ablation"].items():
             print(f"# smoke n_rfc[{sched}]={row['n_rfc']} "
                   f"overlap={row['overlap_speedup']:.3f}x", flush=True)
+        pc = smoke["plan_cache"]
+        print(f"# smoke plan_cache sched_overhead_speedup="
+              f"{pc['overhead_speedup']:.2f}x hit_rate={pc['hit_rate']:.3f} "
+              f"(cold={pc['off']['sched_overhead_s'] * 1e3:.1f}ms "
+              f"cached={pc['on']['sched_overhead_s'] * 1e3:.1f}ms)", flush=True)
         if args.json:
             _write_json(args.json, {**meta, "smoke_result": smoke})
         print(f"# total {time.time() - t0:.1f}s", flush=True)

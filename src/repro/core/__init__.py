@@ -13,6 +13,7 @@ from .fusion import fuse_graph
 from .graph_array import GraphArray, einsum, matmul, tensordot
 from .grid import ArrayGrid, auto_grid
 from .layout import ClusterSpec, HierarchicalLayout, NodeGrid, default_node_grid
+from .plan import PlacementPlan, PlanCache, SchedStats, fingerprint as plan_fingerprint, replay_plan
 from .schedulers import DynamicScheduler, LSHS, RoundRobinScheduler, make_scheduler
 from . import bounds
 
@@ -28,8 +29,13 @@ __all__ = [
     "HierarchicalLayout",
     "LSHS",
     "NodeGrid",
+    "PlacementPlan",
+    "PlanCache",
     "RoundRobinScheduler",
+    "SchedStats",
     "WorkerClocks",
+    "plan_fingerprint",
+    "replay_plan",
     "auto_grid",
     "bounds",
     "default_node_grid",

@@ -61,6 +61,20 @@ class CostModel:
             + S[:, NET_OUT].max() * b / self.link_bw
         )
 
+    def objective_batch(self, S: np.ndarray) -> np.ndarray:
+        """Vectorized ``objective`` over a stacked ``(n, k, 3)`` load tensor
+        (one hypothetical load matrix per placement option).  Arithmetic is
+        ordered exactly as the scalar path so values are bit-identical."""
+        mx = S.max(axis=1)  # (n, 3) per-option column maxima
+        if self.mode == "paper":
+            return mx[:, MEM] + mx[:, NET_IN] + mx[:, NET_OUT]
+        b = self.bytes_per_element
+        return (
+            mx[:, MEM] * b / self.hbm_bw
+            + mx[:, NET_IN] * b / self.link_bw
+            + mx[:, NET_OUT] * b / self.link_bw
+        )
+
     # -- simulated-time channel costs (clock tracks, independent of ``mode``)
     def transfer_seconds(self, elements: float) -> float:
         return elements * self.bytes_per_element / self.link_bw
@@ -275,6 +289,16 @@ class ClusterState:
         self._worker_rr[node] += 1
         return w
 
+    def begin_schedule(self, start: int = 0) -> None:
+        """Reset the per-node worker round-robin cursor to ``start``.
+        Called at the top of every schedule/replay so worker assignment is a
+        function of the structural problem rather than of global dispatch
+        history — required for a replayed plan to reproduce a cold schedule
+        exactly.  ``start`` (derived from the problem's structural RNG)
+        spreads successive *different* small computes across workers instead
+        of piling them all on worker 0."""
+        self._worker_rr = [start] * self.k
+
     # -- transition function T (paper §5.1) ---------------------------------
     def transition(
         self,
@@ -377,6 +401,80 @@ class ClusterState:
         est_finish = self.clocks_pipe.estimate_finish(
             node, work, in_objs, xfers, worker=worker)
         return self.cost_model.objective(S), moved, est_finish, float(S[node].sum())
+
+    def simulate_cost_batch(
+        self,
+        nodes: Sequence[int],
+        out_elements: int,
+        inputs: Sequence[int],
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized ``simulate_cost_detail`` over *all* placement options.
+
+        One numpy pass over the load table ``S``: a stacked ``(n, k, 3)``
+        copy receives the incremental transfer/memory deltas of every
+        hypothetical placement at once, instead of re-simulating per option
+        in Python.  Inputs are processed in order (a transfer's source is the
+        least-net-out holder *after* earlier inputs' deltas, ties to the
+        lowest node id — exactly the scalar path), so each returned array
+        entry is bit-identical to the corresponding
+        ``simulate_cost_detail(node, ...)`` tuple entry.
+
+        Worker-granular (dask) residency surcharges are not modeled here;
+        LSHS option scoring never passes a worker, so the scalar path skips
+        them identically.  Returns ``(objective, moved, est_finish,
+        node_load)`` arrays aligned with ``nodes``.  Transfer deltas (a
+        handful of scalar scatter-adds per non-resident input) are applied
+        per option; the objective maxima and tie-break load sums reduce over
+        the whole option stack in single numpy passes.
+        """
+        n = len(nodes)
+        S = np.repeat(self.S[None, :, :], n, axis=0)  # (n, k, 3)
+        moved = [0.0] * n
+        xfers: List[List[Tuple[int, int, float]]] = [[] for _ in range(n)]
+        obj_size = self.obj_size
+        for obj in inputs:
+            holders = self.M.get(obj)
+            if holders is None:
+                raise KeyError(f"unknown object {obj}")
+            size = obj_size[obj]
+            if len(holders) == self.k:
+                continue  # resident everywhere: no option pays a transfer
+            miss = [i for i in range(n) if nodes[i] not in holders]
+            if not miss:
+                continue
+            hl = sorted(holders)
+            h0 = hl[0]
+            rest = hl[1:]
+            for i in miss:
+                row = S[i]
+                # least-net-out holder; strict < over the sorted holder list
+                # keeps the lowest id on ties == min(key=(net_out, id))
+                src, best = h0, row[h0, NET_OUT]
+                for h in rest:
+                    val = row[h, NET_OUT]
+                    if val < best:
+                        src, best = h, val
+                dst = nodes[i]
+                row[src, NET_OUT] += size
+                row[dst, NET_IN] += size
+                row[dst, MEM] += size  # §5.1: transmission adds memory at dst
+                moved[i] += size
+                xfers[i].append((src, obj, size))
+        ar = np.arange(n)
+        nodes_arr = np.asarray(nodes, dtype=np.intp)
+        S[ar, nodes_arr, MEM] += out_elements
+        in_objs = [(obj, obj_size[obj]) for obj in inputs]
+        work = out_elements + sum(e for _o, e in in_objs)
+        est = np.empty(n)
+        estimate = self.clocks_pipe.estimate_finish
+        for i in range(n):
+            est[i] = estimate(nodes[i], work, in_objs, xfers[i])
+        return (
+            self.cost_model.objective_batch(S),
+            np.asarray(moved),
+            est,
+            S[ar, nodes_arr, :].sum(axis=1),
+        )
 
     def objective(self) -> float:
         return self.cost_model.objective(self.S)

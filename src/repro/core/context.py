@@ -13,6 +13,8 @@ data layout; numerical expressions are scheduled on ``compute()``.
 from __future__ import annotations
 
 import random
+import zlib
+from time import perf_counter
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -22,6 +24,14 @@ from .executor import Executor
 from .graph_array import GraphArray, Vertex, einsum, leaf, matmul, tensordot
 from .grid import ArrayGrid, auto_grid
 from .layout import ClusterSpec, HierarchicalLayout, NodeGrid
+from .plan import (
+    PlanCache,
+    PlanRecorder,
+    SchedStats,
+    fingerprint,
+    replay_plan,
+    structure_counts,
+)
 from .schedulers import SchedulerBase, make_scheduler
 
 
@@ -37,6 +47,7 @@ class ArrayContext:
         seed: int = 0,
         fuse: bool = False,
         pipeline: bool = False,
+        plan_cache: Union[bool, PlanCache] = False,
     ):
         self.cluster = cluster
         if node_grid is None:
@@ -54,10 +65,25 @@ class ArrayContext:
             if isinstance(scheduler, SchedulerBase)
             else make_scheduler(scheduler, cluster.num_nodes)
         )
-        self.rng = random.Random(seed)
         self._seed = seed
         self._create_counter = 0
         self.fuse_enabled = fuse
+        # plan cache (structural-fingerprint -> placement plan); an existing
+        # PlanCache may be shared across compatible contexts
+        if isinstance(plan_cache, PlanCache):
+            self.plan_cache: Optional[PlanCache] = plan_cache
+        else:
+            self.plan_cache = PlanCache() if plan_cache else None
+        self.sched_stats = SchedStats()
+        # configuration signature folded into every fingerprint: any change
+        # to cluster/cost-model/scheduler/seed invalidates cached plans
+        cm = self.state.cost_model
+        self._config_sig = zlib.crc32(repr((
+            cluster.num_nodes, cluster.workers_per_node,
+            cluster.intra_node_coeff, system, cm.mode, cm.bytes_per_element,
+            cm.hbm_bw, cm.link_bw, self.scheduler.name,
+            getattr(self.scheduler, "dest_hint", False), seed,
+        )).encode())
 
     # -- creation (eager, §4) -------------------------------------------------
     def _layout(self, grid: ArrayGrid) -> HierarchicalLayout:
@@ -128,10 +154,46 @@ class ArrayContext:
             if v.is_leaf():
                 continue
             roots.append(v)
-            node, worker = out_layout.placement(idx)
-            forced[v.vid] = (node, worker)
-            self._annotate_dest(v, node)
-        self.scheduler.schedule(roots, forced, self.state, self.executor, self.rng)
+            forced[v.vid] = out_layout.placement(idx)
+        stats = self.sched_stats
+        stats.computes += 1
+        # frontier sampling seeded from an intern-free structural summary,
+        # and the worker round-robin cursor reset (with a structure-derived
+        # offset) per schedule: cold scheduling is deterministic given
+        # (structure, load state), so on structurally repeating loops a cold
+        # re-schedule repeats the recorded plan's decisions exactly (see
+        # plan.py).  With the cache off, only the count-based summary is
+        # needed — the full token stream is skipped.
+        t0 = perf_counter()
+        if self.plan_cache is not None:
+            fp = fingerprint(roots, forced, self.state, self._config_sig)
+            rng_key = fp.rng_key
+        else:
+            fp = None
+            rng_key = structure_counts(roots)
+        stats.fingerprint_s += perf_counter() - t0
+        rng = random.Random(rng_key ^ (self._seed * 2654435761))
+        self.state.begin_schedule((rng_key >> 7) % self.cluster.workers_per_node)
+        if fp is not None:
+            cached = self.plan_cache.get(fp.key)
+            if cached is not None:
+                t1 = perf_counter()
+                replay_plan(cached, fp.verts, self.state, self.executor, stats=stats)
+                stats.replay_s += perf_counter() - t1
+                stats.plan_hits += 1
+                return ga
+            recorder = PlanRecorder(fp.cid_of)
+        else:
+            recorder = None
+        for root in roots:
+            self._annotate_dest(root, forced[root.vid][0])
+        t1 = perf_counter()
+        self.scheduler.schedule(roots, forced, self.state, self.executor, rng,
+                                recorder=recorder, stats=stats)
+        stats.sched_cold_s += perf_counter() - t1
+        if recorder is not None:
+            self.plan_cache.put(fp.key, recorder.plan())
+            stats.plan_misses += 1
         return ga
 
     @staticmethod
@@ -159,6 +221,10 @@ class ArrayContext:
         d["transfers"] = self.state.network_elements()
         d["makespan"] = self.state.makespan(pipeline=self.pipeline)
         d["pending_ops"] = self.executor.pending_count()
+        d["plan_hits"] = self.sched_stats.plan_hits
+        d["plan_misses"] = self.sched_stats.plan_misses
+        d["sched_overhead_s"] = self.sched_stats.scheduling_overhead_s
+        d["dispatch_s"] = self.sched_stats.dispatch_s
         return d
 
     def reset_loads(self) -> None:
@@ -168,3 +234,4 @@ class ArrayContext:
         self.state.transfers.clear()
         self.state.reset_clocks()
         self.executor.stats.reset()
+        self.sched_stats.reset()

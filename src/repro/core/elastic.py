@@ -39,6 +39,10 @@ def elastic_relayout(
         system=old_ctx.state.system,
         seed=old_ctx._seed,
         pipeline=old_ctx.pipeline,
+        # share the plan cache across the re-plan: the new cluster's config
+        # signature keys its plans separately, so stale plans never hit, and
+        # post-scale iterations keep amortizing once they re-record
+        plan_cache=old_ctx.plan_cache or False,
     )
     # share physical storage: the object store outlives the re-plan
     new_ctx.executor = old_ctx.executor

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
+from time import perf_counter
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -71,6 +72,7 @@ class ExecStats:
     n_queued: int = 0       # ops that went through the pipelined queues
     n_flushes: int = 0      # event-loop drains
     peak_queue: int = 0     # max total ops pending at once
+    dispatch_s: float = 0.0  # wall time inside run_op — the γ term in seconds
 
     def reset(self) -> None:
         self.n_rfc = 0
@@ -79,6 +81,7 @@ class ExecStats:
         self.n_queued = 0
         self.n_flushes = 0
         self.peak_queue = 0
+        self.dispatch_s = 0.0
 
 
 class Executor:
@@ -175,7 +178,9 @@ class Executor:
     ) -> None:
         """Dispatch one block op.  ``eta`` is the scheduler's simulated
         (start, finish) for the op (from ``ClusterState.transition``); in
-        pipelined mode it orders the event-loop drain."""
+        pipelined mode it orders the event-loop drain.  Wall time spent here
+        accumulates in ``stats.dispatch_s`` (the per-op γ overhead, Fig. 8)."""
+        t0 = perf_counter()
         self.stats.n_rfc += 1
         self.lineage[out_id] = OpRecord(
             out_id, op, dict(meta), tuple(in_ids), placement, times=eta
@@ -186,6 +191,7 @@ class Executor:
         self.shapes[out_id] = out_shape
         if self.mode == "sim":
             self.store[out_id] = None
+            self.stats.dispatch_s += perf_counter() - t0
             return
         if self.pipeline:
             pending = PendingOp(
@@ -197,7 +203,10 @@ class Executor:
             self._pending_ids.add(out_id)
             self.stats.n_queued += 1
             self.stats.peak_queue = max(self.stats.peak_queue, len(self._pending_ids))
+            self.stats.dispatch_s += perf_counter() - t0
             return
+        # sync mode: dispatch accounting stops before the block math itself
+        self.stats.dispatch_s += perf_counter() - t0
         self._execute(out_id, op, meta, in_ids, placement)
 
     def _execute(

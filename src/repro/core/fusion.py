@@ -6,6 +6,15 @@ block-level op, reducing the number of remote function calls (the γ dispatch
 term of §7) by the chain length without changing placement semantics: a fused
 chain has a single operand, hence a single placement option, exactly like the
 unary vertex it replaces.
+
+Already-``fused`` children (from a previous ``fuse_graph`` pass over a
+shared, not-yet-computed subgraph) are inlined and the walk *continues*
+below them, so a chain interrupted by earlier fusion boundaries still
+collapses to one vertex.  Absorbed vertices are detached from their
+children's parent lists — a dangling parent link would otherwise let the
+scheduler's ``_wake_parents`` resurrect a dead vertex as frontier work (a
+wasted RFC), and it would pessimize the single-parent fusability test for
+later passes.
 """
 from __future__ import annotations
 
@@ -13,7 +22,8 @@ from typing import Dict, List, Tuple
 
 from .graph_array import GraphArray, Vertex
 
-_FUSABLE = {"neg", "exp", "log", "sqrt", "abs", "square", "sigmoid", "tanh", "identity"}
+_FUSABLE = {"neg", "exp", "log", "sqrt", "abs", "square", "sigmoid", "tanh",
+            "identity", "relu", "rsqrt", "reciprocal"}
 
 
 def _chain_step(v: Vertex) -> Tuple:
@@ -42,26 +52,34 @@ def fuse_graph(ga: GraphArray) -> int:
             walk(c)
         if not _fusable(v):
             return
-        # collapse v's child chain into v (absorbing already-fused children)
+        # collapse v's child chain into v, inlining already-fused children
+        # and continuing below them (no break: trailing chains collapse too)
         chain: List[Tuple] = [_chain_step(v)]
+        absorbed: List[Vertex] = []
         cur = v.children[0]
         while len(cur.parents) == 1 and cur.kind == "op" and (_fusable(cur) or cur.op == "fused"):
             if cur.op == "fused":
                 chain.extend(reversed(cur.meta["chain"]))
-                eliminated += 1
-                cur = cur.children[0]
-                break
-            chain.append(_chain_step(cur))
+            else:
+                chain.append(_chain_step(cur))
             eliminated += 1
+            absorbed.append(cur)
             cur = cur.children[0]
         if len(chain) == 1:
             return
         chain.reverse()  # apply bottom-up
+        old_child = v.children[0]
         v.op = "fused"
         v.meta = {"chain": chain}
-        old_child = v.children[0]
-        if cur not in v.children:
-            v.children = [cur]
+        v.children = [cur]
+        if v in old_child.parents:
+            old_child.parents.remove(v)
+        # detach absorbed vertices so they can never re-enter the frontier
+        for a in absorbed:
+            for c in a.children:
+                if a in c.parents:
+                    c.parents.remove(a)
+        if v not in cur.parents:
             cur.parents.append(v)
 
     for idx in ga.grid.iter_indices():

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
+from math import prod as _prod
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -31,7 +32,8 @@ def _next_id() -> int:
 
 
 class Vertex:
-    __slots__ = ("vid", "kind", "op", "shape", "children", "meta", "placement", "parents")
+    __slots__ = ("vid", "kind", "op", "shape", "children", "meta", "placement",
+                 "parents", "ftok")
 
     def __init__(
         self,
@@ -49,13 +51,14 @@ class Vertex:
         self.meta = meta or {}
         self.placement: Optional[Tuple[int, int]] = None  # (node, worker) for leaves
         self.parents: List[Vertex] = []
+        self.ftok = None  # cached leaf fingerprint token (plan.fingerprint)
         for c in self.children:
             c.parents.append(self)
 
     # -- helpers -----------------------------------------------------------
     @property
     def elements(self) -> int:
-        return int(np.prod(self.shape)) if self.shape else 1
+        return _prod(self.shape) if self.shape else 1
 
     def is_leaf(self) -> bool:
         return self.kind == "leaf"
@@ -71,6 +74,7 @@ class Vertex:
         self.children = []
         self.meta = {}
         self.placement = (node, worker)
+        self.ftok = None  # any cached fingerprint token is for the op form
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"Vertex({self.kind}:{self.op or 'leaf'} id={self.vid} shape={self.shape})"
@@ -97,6 +101,9 @@ _UNARY: Dict[str, Callable[[np.ndarray], np.ndarray]] = {
     "tanh": np.tanh,
     "identity": lambda x: x,
     "softplus": lambda x: np.logaddexp(0.0, x),
+    "relu": lambda x: np.maximum(x, 0.0),
+    "rsqrt": lambda x: 1.0 / np.sqrt(x),
+    "reciprocal": lambda x: 1.0 / x,
 }
 
 _BINARY: Dict[str, Callable[[np.ndarray, np.ndarray], np.ndarray]] = {
@@ -389,6 +396,15 @@ class GraphArray:
 
     def softplus(self):
         return self._unary("softplus")
+
+    def relu(self):
+        return self._unary("relu")
+
+    def rsqrt(self):
+        return self._unary("rsqrt")
+
+    def reciprocal(self):
+        return self._unary("reciprocal")
 
     # -- reductions ------------------------------------------------------------
     def sum(self, axis: Optional[int] = None) -> "GraphArray":

@@ -3,24 +3,68 @@
 LSHS executes a GraphArray by sequentially scheduling *frontier* vertices
 (operation vertices all of whose children are leaves).  A vertex is sampled
 from the frontier; every placement option is simulated against the
-ClusterState; the option minimizing Eq. 2 is chosen; the GraphArray is
-transitioned (Reduce vertices update their remaining operands, op vertices
-become leaves) and the block operation is dispatched to the executor.
+ClusterState (in one vectorized pass, ``ClusterState.simulate_cost_batch``);
+the option minimizing Eq. 2 is chosen; the GraphArray is transitioned
+(Reduce vertices update their remaining operands, op vertices become leaves)
+and the block operation is dispatched to the executor.
 
 The final operation of every output subgraph is forced onto the node given by
 the hierarchical data layout, so every scheduled GraphArray ends up with a
 hierarchical layout (paper §5: "implicitly handled within the transition
 function").
+
+A cold run may be captured by a ``plan.PlanRecorder`` (the ``recorder``
+hooks below): every dispatch and alias decision is recorded in canonical
+vertex-id space so a structurally identical problem can later skip this
+module entirely and be replayed by ``plan.replay_plan``.
 """
 from __future__ import annotations
 
 import random
+from time import perf_counter
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from .cluster import ClusterState
 from .graph_array import Vertex
+
+
+class _Frontier:
+    """Uniform O(1) sampling and O(1) removal over the scheduling frontier.
+
+    Replaces the seed's per-step ``sorted(frontier)`` (an O(F log F) resort
+    on every scheduling step, O(V·F log F) per schedule): vertices live in a
+    flat list with a vid->index map, removal swaps with the tail, and
+    sampling indexes the list directly.  Membership adds are idempotent, so
+    ``_wake_parents`` may offer the same parent repeatedly."""
+
+    __slots__ = ("_items", "_pos")
+
+    def __init__(self):
+        self._items: List[Vertex] = []
+        self._pos: Dict[int, int] = {}
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __contains__(self, vid: int) -> bool:
+        return vid in self._pos
+
+    def add(self, v: Vertex) -> None:
+        if v.vid not in self._pos:
+            self._pos[v.vid] = len(self._items)
+            self._items.append(v)
+
+    def sample(self, rng: random.Random) -> Vertex:
+        return self._items[rng.randrange(len(self._items))]
+
+    def remove(self, vid: int) -> None:
+        i = self._pos.pop(vid)
+        last = self._items.pop()
+        if i < len(self._items):
+            self._items[i] = last
+            self._pos[last.vid] = i
 
 
 class SchedulerBase:
@@ -33,8 +77,10 @@ class SchedulerBase:
         state: ClusterState,
         executor,
         rng: random.Random,
+        recorder=None,
+        stats=None,
     ) -> None:
-        frontier: Dict[int, Vertex] = {}
+        frontier = _Frontier()
         visited: Set[int] = set()
 
         def visit(v: Vertex) -> None:
@@ -44,35 +90,33 @@ class SchedulerBase:
             for c in v.children:
                 visit(c)
             if v.kind != "leaf" and v.ready():
-                frontier[v.vid] = v
+                frontier.add(v)
 
         for r in roots:
             visit(r)
 
         while frontier:
-            vids = sorted(frontier)
-            vid = vids[rng.randrange(len(vids))]
-            v = frontier[vid]
+            v = frontier.sample(rng)
             if v.kind == "reduce" and len(v.children) > 2:
-                self._reduce_step(v, forced, state, executor, rng)
+                self._reduce_step(v, forced, state, executor, rng, recorder, stats)
                 # v stays on the frontier until it collapses to a leaf
                 if v.kind == "leaf":
-                    del frontier[vid]
+                    frontier.remove(v.vid)
                     self._wake_parents(v, frontier)
                 continue
-            del frontier[vid]
+            frontier.remove(v.vid)
             if v.kind == "reduce":
                 # 1 or 2 children left: the final add IS this vertex's output
-                self._finalize_reduce(v, forced, state, executor, rng)
+                self._finalize_reduce(v, forced, state, executor, rng, recorder, stats)
             else:
-                self._place_op(v, forced, state, executor, rng)
+                self._place_op(v, forced, state, executor, rng, recorder, stats)
             self._wake_parents(v, frontier)
 
     # -- shared helpers ------------------------------------------------------
-    def _wake_parents(self, v: Vertex, frontier: Dict[int, Vertex]) -> None:
+    def _wake_parents(self, v: Vertex, frontier: _Frontier) -> None:
         for p in v.parents:
             if p.kind != "leaf" and p.ready():
-                frontier[p.vid] = p
+                frontier.add(p)
 
     def _dispatch(
         self,
@@ -81,12 +125,19 @@ class SchedulerBase:
         state: ClusterState,
         executor,
         worker: Optional[int] = None,
+        recorder=None,
+        stats=None,
     ) -> Tuple[int, int]:
         in_ids = [c.vid for c in v.children]
         if worker is None:
             worker = state.pick_worker(node)
+        if recorder is not None:
+            recorder.dispatched(v, node, worker)
+        t0 = perf_counter() if stats is not None else 0.0
         eta = state.transition(node, v.vid, v.elements, in_ids, worker=worker)
         executor.run_op(v.vid, v.op, v.meta, in_ids, (node, worker), eta=eta)
+        if stats is not None:
+            stats.dispatch_s += perf_counter() - t0
         return node, worker
 
     def _placement_options(self, v: Vertex, state: ClusterState) -> List[int]:
@@ -109,14 +160,14 @@ class SchedulerBase:
         raise NotImplementedError
 
     # -- vertex handlers -------------------------------------------------------
-    def _place_op(self, v, forced, state, executor, rng) -> None:
+    def _place_op(self, v, forced, state, executor, rng, recorder=None, stats=None) -> None:
         if v.vid in forced:
             node, worker = forced[v.vid]
         else:
             options = self._placement_options(v, state)
             node = self._choose(v, options, state, rng)
             worker = None
-        node, worker = self._dispatch(v, node, state, executor, worker)
+        node, worker = self._dispatch(v, node, state, executor, worker, recorder, stats)
         v.to_leaf(node, worker)
 
     def _pair(self, v: Vertex, rng: random.Random) -> Tuple[Vertex, Vertex]:
@@ -136,7 +187,7 @@ class SchedulerBase:
                 return group[0], group[1]
         return v.children[0], v.children[1]
 
-    def _reduce_step(self, v, forced, state, executor, rng) -> None:
+    def _reduce_step(self, v, forced, state, executor, rng, recorder=None, stats=None) -> None:
         a, b = self._pair(v, rng)
         tmp = Vertex("op", v.op or "add", a.shape, [a, b])
         # tmp was appended as a parent of a/b; it replaces them inside v
@@ -144,7 +195,8 @@ class SchedulerBase:
         if getattr(self, "dest_hint", False) and "dest" in v.meta:
             options = sorted(set(options) | {v.meta["dest"]})
         node = self._choose(tmp, options, state, rng)
-        node, worker = self._dispatch(tmp, node, state, executor)
+        node, worker = self._dispatch(tmp, node, state, executor,
+                                      recorder=recorder, stats=stats)
         tmp.to_leaf(node, worker)
         kids = [c for c in v.children if c is not a and c is not b]
         kids.append(tmp)
@@ -155,14 +207,18 @@ class SchedulerBase:
             executor.alias(v.vid, only.vid)
             state.add_object(v.vid, only.placement[0], only.placement[1],
                              v.elements, ready_of=only.vid)
+            if recorder is not None:
+                recorder.aliased(v, only)
             v.to_leaf(*only.placement)
 
-    def _finalize_reduce(self, v, forced, state, executor, rng) -> None:
+    def _finalize_reduce(self, v, forced, state, executor, rng, recorder=None, stats=None) -> None:
         if len(v.children) == 1:
             only = v.children[0]
             executor.alias(v.vid, only.vid)
             state.add_object(v.vid, only.placement[0], only.placement[1],
                              v.elements, ready_of=only.vid)
+            if recorder is not None:
+                recorder.aliased(v, only)
             v.to_leaf(*only.placement)
             return
         if v.vid in forced:
@@ -173,7 +229,7 @@ class SchedulerBase:
             node = self._choose(v, options, state, rng)
             worker = None
         v.op = v.op or "add"
-        node, worker = self._dispatch(v, node, state, executor, worker)
+        node, worker = self._dispatch(v, node, state, executor, worker, recorder, stats)
         v.to_leaf(node, worker)
 
 
@@ -183,6 +239,11 @@ class LSHS(SchedulerBase):
     least transferred bytes, then by earliest estimated finish time on the
     pipelined clock track (overlap-aware: prefers nodes whose workers and
     links free up soonest), then by least node load.
+
+    All options are scored in one vectorized pass
+    (``ClusterState.simulate_cost_batch``); the stable lexsort reproduces the
+    removed per-option Python loop's first-strictly-smaller-key argmin
+    exactly, including its lowest-node-id tie rule.
 
     ``dest_hint=True`` (beyond-paper, "LSHS+") additionally offers each
     algebra/reduce vertex its output subgraph's final layout node as a
@@ -202,13 +263,15 @@ class LSHS(SchedulerBase):
         return opts
 
     def _choose(self, v, options, state, rng):
-        best_node, best_key = None, None
+        if len(options) == 1:
+            return options[0]
         in_ids = [c.vid for c in v.children]
-        for node in options:
-            key = state.simulate_cost_detail(node, v.elements, in_ids)
-            if best_key is None or key < best_key:
-                best_key, best_node = key, node
-        return best_node
+        objective, moved, est, load = state.simulate_cost_batch(
+            options, v.elements, in_ids)
+        # min over lexicographic keys returns the first minimum, matching the
+        # scalar loop's strict-< update rule (lowest option index on ties)
+        keys = zip(objective.tolist(), moved.tolist(), est.tolist(), load.tolist())
+        return options[min(enumerate(keys), key=lambda t: t[1])[0]]
 
 
 class RoundRobinScheduler(SchedulerBase):

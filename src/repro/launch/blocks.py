@@ -5,10 +5,19 @@ per-node loads plus both simulated makespans (the overlap ablation).
     PYTHONPATH=src python -m repro.launch.blocks --workload logreg \
         --nodes 16 --workers 32 --scheduler lshs --pipeline
     PYTHONPATH=src python -m repro.launch.blocks --workload dgemm --sync
+    PYTHONPATH=src python -m repro.launch.blocks --workload logreg \
+        --iters 10 --plan-cache
+
+``--iters N`` runs the workload as an N-iteration loop (the Newton loop for
+logreg, repeated C = A @ B for dgemm) — the iterative regime where
+``--plan-cache`` amortizes scheduling: iteration 1 cold-schedules and records
+placement plans, later iterations replay them.  The report includes the
+plan-cache hit/miss counts and the scheduler-overhead vs dispatch-time split.
 
 The ``--fail-node`` flag injects a node failure while pipelined ops are
 still queued, then recovers from lineage — the fault-tolerance path of the
-async executor.
+async executor (replayed plans record lineage exactly like cold schedules,
+so recovery works identically with the cache on).
 """
 from __future__ import annotations
 
@@ -18,16 +27,26 @@ import json
 import numpy as np
 
 from repro.core import ArrayContext, ClusterSpec
-from repro.launch.workloads import dgemm_graph, logreg_newton_graph
+from repro.launch.workloads import (
+    dgemm_graph,
+    dgemm_loop,
+    logreg_newton_graph,
+    logreg_newton_loop,
+)
 
 
-def build_workload(ctx: ArrayContext, workload: str, scale: int):
+def build_workload(ctx: ArrayContext, workload: str, scale: int, iters: int = 1):
     if workload == "logreg":
         n, d, q = 1 << (10 + scale), 64, 8 * ctx.cluster.num_nodes
+        if iters > 1:
+            _g, H, _beta = logreg_newton_loop(ctx, n, d, q, iters=iters)
+            return H
         _g, H = logreg_newton_graph(ctx, n, d, q)
         return H
     if workload == "dgemm":
         dim, g = 256 << scale, 2 * int(np.sqrt(ctx.cluster.num_nodes))
+        if iters > 1:
+            return dgemm_loop(ctx, dim, g, iters=iters)
         return dgemm_graph(ctx, dim, g)
     raise ValueError(f"unknown workload {workload!r}")
 
@@ -42,6 +61,12 @@ def main() -> None:
     ap.add_argument("--backend", default="sim", choices=("sim", "numpy"))
     ap.add_argument("--scale", type=int, default=2, help="log2 size multiplier")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--iters", type=int, default=1,
+                    help="iterations of the workload loop (>1 makes the "
+                         "graphs structurally repeat, the plan-cache regime)")
+    ap.add_argument("--plan-cache", dest="plan_cache", action="store_true",
+                    help="cache placement plans by structural fingerprint "
+                         "and replay them on repeat graphs")
     group = ap.add_mutually_exclusive_group()
     group.add_argument("--pipeline", dest="pipeline", action="store_true",
                        help="queue ops and drain via the async event loop")
@@ -59,8 +84,9 @@ def main() -> None:
         backend=args.backend,
         seed=args.seed,
         pipeline=args.pipeline,
+        plan_cache=args.plan_cache,
     )
-    out = build_workload(ctx, args.workload, args.scale)
+    out = build_workload(ctx, args.workload, args.scale, iters=args.iters)
 
     if args.fail_node is not None:
         if args.backend != "numpy":
@@ -77,8 +103,10 @@ def main() -> None:
     report.update(
         workload=args.workload, scheduler=args.scheduler,
         pipeline=args.pipeline, nodes=args.nodes, workers=args.workers,
-        n_queued=ctx.executor.stats.n_queued,
+        n_queued=ctx.executor.stats.n_queued, iters=args.iters,
+        plan_cache=args.plan_cache,
     )
+    report.update(ctx.sched_stats.as_dict())
     print(json.dumps(report, indent=2, default=float))
 
 

@@ -247,3 +247,73 @@ class TestExtendedAPI:
         ctx.reset_loads()
         X.max(axis=0).compute()
         assert len(ctx.state.transfers) == 3  # k-1
+
+
+class TestNewUnaryOpsAndFusion:
+    """relu/rsqrt/reciprocal (new _FUSABLE members) and the fuse_graph
+    trailing-chain fix: an already-fused child is inlined and the walk
+    continues below it instead of breaking the chain."""
+
+    def test_relu_rsqrt_reciprocal_match_numpy(self):
+        ctx = make_ctx()
+        X = ctx.random((48, 32), grid=(4, 2))
+        Xn = X.to_numpy()
+        assert np.allclose(X.relu().to_numpy(), np.maximum(Xn, 0.0))
+        P = (X * X + 1.0).compute()  # strictly positive operand
+        Pn = P.to_numpy()
+        assert np.allclose(P.rsqrt().to_numpy(), 1.0 / np.sqrt(Pn))
+        assert np.allclose(P.reciprocal().to_numpy(), 1.0 / Pn)
+
+    def test_new_ops_fuse_into_one_rfc_per_block(self):
+        ctx = make_ctx(k=2, r=2, ng=(2, 1), backend="sim", fuse=True)
+        X = ctx.random((64, 8), grid=(4, 1))
+        n0 = ctx.executor.stats.n_rfc
+        (1.0 + X.relu().rsqrt().reciprocal()).compute()
+        assert ctx.executor.stats.n_rfc - n0 == 4  # 1 fused op per block
+
+    def test_fuse_absorbs_trailing_fused_chain(self):
+        """A pre-fused vertex mid-chain (as left by an earlier fusion pass
+        over a shared subgraph) is inlined and fusion continues below it."""
+        from repro.core.fusion import fuse_graph
+        from repro.core.graph_array import (
+            GraphArray, Vertex, execute_block_op, leaf,
+        )
+        from repro.core.grid import ArrayGrid
+
+        ctx = make_ctx(k=1, r=1, ng=(1,))
+        base = leaf((8, 8), 0, 0)
+        u = Vertex("op", "sqrt", (8, 8), [base])
+        f = Vertex("op", "fused", (8, 8), [u],
+                   {"chain": [("unary", "neg")]})  # earlier pass's residue
+        top = Vertex("op", "sigmoid", (8, 8), [f])
+        grid = ArrayGrid((8, 8), (1, 1))
+        blocks = np.empty((1, 1), dtype=object)
+        blocks[0, 0] = top
+        ga = GraphArray(ctx, grid, blocks)
+        eliminated = fuse_graph(ga)
+        assert eliminated == 2  # fused vertex AND the sqrt below it
+        assert top.op == "fused"
+        assert top.children == [base]          # chain fully collapsed
+        assert top.meta["chain"] == [("unary", "sqrt"), ("unary", "neg"),
+                                     ("unary", "sigmoid")]
+        # absorbed vertices are detached: nothing can resurrect them
+        assert all(p is top for p in base.parents)
+        x = np.abs(np.random.default_rng(0).standard_normal((8, 8))) + 1.0
+        want = 1.0 / (1.0 + np.exp(np.sqrt(x)))  # sigmoid(-sqrt(x))
+        got = execute_block_op("fused", top.meta, [x])
+        assert np.allclose(got, want)
+
+    def test_fuse_twice_over_shared_graph(self):
+        """fuse_graph twice over overlapping, not-yet-computed expressions
+        still collapses to one fused op per block (no split chains)."""
+        from repro.core.fusion import fuse_graph
+
+        ctx = make_ctx(k=2, r=2, ng=(2, 1), backend="sim")
+        X = ctx.random((64, 8), grid=(4, 1))
+        inner = X.square().exp()
+        fuse_graph(inner)            # pre-fuse the shared subexpression
+        outer = inner.sigmoid().relu()
+        fuse_graph(outer)
+        n0 = ctx.executor.stats.n_rfc
+        outer.compute()
+        assert ctx.executor.stats.n_rfc - n0 == 4  # one fused op per block
