@@ -110,7 +110,7 @@ def smoke() -> dict:
     scheduler-overhead comparison (hit rate + cached-vs-cold speedup), so
     scheduling-time regressions are visible per-PR.  Returns a JSON-able
     dict (run.py --smoke --json writes it as the CI artifact)."""
-    from . import bench_overhead
+    from . import bench_overhead, bench_tensor
 
     result = {"pipeline_ablation": pipeline_ablation(
         n=1 << 12, d=32, k=4, r=2, emit_rows=False)}
@@ -121,6 +121,7 @@ def smoke() -> dict:
     result["n_rfc_add"] = ctx.executor.stats.n_rfc
     result["plan_cache"] = bench_overhead.plan_cache_comparison(
         quick=True, emit_rows=False)
+    result["reshard"] = bench_tensor.reshard_smoke()
     return result
 
 

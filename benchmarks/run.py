@@ -85,6 +85,11 @@ def main() -> None:
               f"{pc['overhead_speedup']:.2f}x hit_rate={pc['hit_rate']:.3f} "
               f"(cold={pc['off']['sched_overhead_s'] * 1e3:.1f}ms "
               f"cached={pc['on']['sched_overhead_s'] * 1e3:.1f}ms)", flush=True)
+        rs = smoke["reshard"]
+        print(f"# smoke reshard moved={rs['reshard_moved']:.0f} "
+              f"naive={rs['naive_moved']:.0f} "
+              f"cpals moved={rs['cpals_reshard_moved']:.0f} "
+              f"naive={rs['cpals_naive_moved']:.0f}", flush=True)
         if args.json:
             _write_json(args.json, {**meta, "smoke_result": smoke})
         print(f"# total {time.time() - t0:.1f}s", flush=True)

@@ -44,6 +44,9 @@ Cm = ctx.random((32, 8), grid=(1, 1))
 M = einsum("ijk,jf,kf->if", X, Bm, Cm).compute()   # MTTKRP (§8.4)
 print("einsum MTTKRP result:", M.shape)
 
+# layouts are not frozen: X.reshard(grid=(1, 4, 1)) re-partitions along mode 1
+# via an LSHS-scheduled move graph (see examples/tensor_factorization.py)
+
 print("\nper-node loads (memory, net-in, net-out):")
 print(ctx.state.S.astype(int))
 print("numerics match numpy:", np.allclose(

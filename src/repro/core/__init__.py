@@ -12,8 +12,17 @@ from .executor import Executor
 from .fusion import fuse_graph
 from .graph_array import GraphArray, einsum, matmul, tensordot
 from .grid import ArrayGrid, auto_grid
-from .layout import ClusterSpec, HierarchicalLayout, NodeGrid, default_node_grid
+from .layout import (
+    ClusterSpec,
+    HierarchicalLayout,
+    LayoutChoice,
+    NodeGrid,
+    default_node_grid,
+    node_grid_factorizations,
+    tune_node_grid,
+)
 from .plan import PlacementPlan, PlanCache, SchedStats, fingerprint as plan_fingerprint, replay_plan
+from .reshard import reshard, reshard_naive
 from .schedulers import DynamicScheduler, LSHS, RoundRobinScheduler, make_scheduler
 from . import bounds
 
@@ -36,6 +45,7 @@ __all__ = [
     "WorkerClocks",
     "plan_fingerprint",
     "replay_plan",
+    "LayoutChoice",
     "auto_grid",
     "bounds",
     "default_node_grid",
@@ -43,7 +53,11 @@ __all__ = [
     "fuse_graph",
     "make_scheduler",
     "matmul",
+    "node_grid_factorizations",
+    "reshard",
+    "reshard_naive",
     "tensordot",
+    "tune_node_grid",
     "MEM",
     "NET_IN",
     "NET_OUT",

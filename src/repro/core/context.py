@@ -23,7 +23,7 @@ from .cluster import ClusterState, CostModel
 from .executor import Executor
 from .graph_array import GraphArray, Vertex, einsum, leaf, matmul, tensordot
 from .grid import ArrayGrid, auto_grid
-from .layout import ClusterSpec, HierarchicalLayout, NodeGrid
+from .layout import ClusterSpec, HierarchicalLayout, NodeGrid, default_node_grid
 from .plan import (
     PlanCache,
     PlanRecorder,
@@ -48,6 +48,7 @@ class ArrayContext:
         fuse: bool = False,
         pipeline: bool = False,
         plan_cache: Union[bool, PlanCache] = False,
+        auto_layout: bool = False,
     ):
         self.cluster = cluster
         if node_grid is None:
@@ -68,6 +69,11 @@ class ArrayContext:
         self._seed = seed
         self._create_counter = 0
         self.fuse_enabled = fuse
+        # auto layout (§4 heuristic, per-array): creations and scheduled
+        # outputs get a node grid factored to match their own block grid
+        # (``default_node_grid``) instead of the context-wide ``node_grid``;
+        # explicit per-array overrides (reshard targets) always win
+        self.auto_layout = auto_layout
         # plan cache (structural-fingerprint -> placement plan); an existing
         # PlanCache may be shared across compatible contexts
         if isinstance(plan_cache, PlanCache):
@@ -82,12 +88,16 @@ class ArrayContext:
             cluster.num_nodes, cluster.workers_per_node,
             cluster.intra_node_coeff, system, cm.mode, cm.bytes_per_element,
             cm.hbm_bw, cm.link_bw, self.scheduler.name,
-            getattr(self.scheduler, "dest_hint", False), seed,
+            getattr(self.scheduler, "dest_hint", False), seed, auto_layout,
         )).encode())
 
     # -- creation (eager, §4) -------------------------------------------------
-    def _layout(self, grid: ArrayGrid) -> HierarchicalLayout:
-        return HierarchicalLayout(grid, self.node_grid, self.cluster)
+    def _layout(self, grid: ArrayGrid,
+                node_grid: Optional[NodeGrid] = None) -> HierarchicalLayout:
+        if node_grid is None:
+            node_grid = (default_node_grid(grid, self.cluster)
+                         if self.auto_layout else self.node_grid)
+        return HierarchicalLayout(grid, node_grid, self.cluster)
 
     def _create(
         self,
@@ -101,7 +111,8 @@ class ArrayContext:
             agrid = auto_grid(shape, self.cluster.num_workers)
         else:
             agrid = ArrayGrid(shape, tuple(int(g) for g in grid))
-        layout = self._layout(agrid)
+        ng = default_node_grid(agrid, self.cluster) if self.auto_layout else None
+        layout = self._layout(agrid, ng)
         blocks = np.empty(agrid.grid if agrid.grid else (), dtype=object)
         for idx in agrid.iter_indices():
             node, worker = layout.placement(idx)
@@ -115,7 +126,7 @@ class ArrayContext:
             )
             self.state.add_object(v.vid, node, worker, int(np.prod(bshape)))
             blocks[idx if agrid.grid else ()] = v
-        return GraphArray(self, agrid, blocks)
+        return GraphArray(self, agrid, blocks, node_grid=ng)
 
     def zeros(self, shape, grid=None) -> GraphArray:
         return self._create(shape, grid, "zeros")
@@ -146,7 +157,8 @@ class ArrayContext:
             from .fusion import fuse_graph
 
             fuse_graph(ga)
-        out_layout = self._layout(ga.grid)
+        # per-array layout override (reshard target) beats auto/default layout
+        out_layout = self._layout(ga.grid, getattr(ga, "node_grid", None))
         roots = []
         forced: Dict[int, Tuple[int, int]] = {}
         for idx in ga.grid.iter_indices():
@@ -225,6 +237,8 @@ class ArrayContext:
         d["plan_misses"] = self.sched_stats.plan_misses
         d["sched_overhead_s"] = self.sched_stats.scheduling_overhead_s
         d["dispatch_s"] = self.sched_stats.dispatch_s
+        d["reshards"] = self.sched_stats.reshards
+        d["reshard_moved"] = self.sched_stats.reshard_moved_elements
         return d
 
     def reset_loads(self) -> None:

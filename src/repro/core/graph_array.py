@@ -173,6 +173,21 @@ def execute_block_op(op: str, meta: Dict[str, Any], inputs: Sequence[np.ndarray]
         return np.concatenate(inputs, axis=0)
     if op == "slice_rows":
         return inputs[0][meta["start"] : meta["stop"]]
+    if op == "slice":  # n-D sub-block extraction (reshard move graphs)
+        return inputs[0][tuple(
+            slice(a, b) for a, b in zip(meta["starts"], meta["stops"]))]
+    if op == "concat_blocks":  # paste n pieces into one block at offsets
+        out = np.zeros(meta["shape"])
+        for off, piece in zip(meta["offsets"], inputs):
+            out[tuple(slice(o, o + s) for o, s in zip(off, piece.shape))] = piece
+        return out
+    if op == "matricize":  # mode-n unfolding of a block (CP-ALS, §8.4)
+        x = inputs[0]
+        return np.moveaxis(x, meta["mode"], 0).reshape(x.shape[meta["mode"]], -1)
+    if op == "khatri_rao":  # column-wise Kronecker of two factor blocks
+        a, b = inputs
+        return np.einsum("jf,kf->jkf", a, b).reshape(a.shape[0] * b.shape[0],
+                                                     a.shape[1])
     if op == "solve":  # H^{-1} g on a single-block Hessian (§6)
         return np.linalg.solve(inputs[0], inputs[1])
     if op == "rsolve":  # X R^{-1} (indirect TSQR, §8.3)
@@ -236,6 +251,17 @@ def infer_shape(op: str, meta: Dict[str, Any], in_shapes: Sequence[Tuple[int, ..
         return (m,) + tuple(in_shapes[0][1:])
     if op == "slice_rows":
         return (meta["stop"] - meta["start"],) + tuple(in_shapes[0][1:])
+    if op == "slice":
+        return tuple(b - a for a, b in zip(meta["starts"], meta["stops"]))
+    if op == "concat_blocks":
+        return tuple(meta["shape"])
+    if op == "matricize":
+        s = tuple(in_shapes[0])
+        mode = meta["mode"]
+        return (s[mode], int(_prod(s[:mode] + s[mode + 1:])))
+    if op == "khatri_rao":
+        a, b = in_shapes
+        return (a[0] * b[0], a[1])
     if op == "solve":
         return tuple(in_shapes[1])
     if op == "rsolve":
@@ -251,10 +277,16 @@ class GraphArray:
     """A block-partitioned array whose blocks are vertices of a computation
     graph.  ``materialized`` iff every block is a leaf."""
 
-    def __init__(self, ctx: "ArrayContext", grid: ArrayGrid, blocks: np.ndarray):
+    def __init__(self, ctx: "ArrayContext", grid: ArrayGrid, blocks: np.ndarray,
+                 node_grid=None):
         self.ctx = ctx
         self.grid = grid
         self.blocks = blocks  # object ndarray of Vertex, shape == grid.grid
+        # optional per-array layout override (reshard targets): when set,
+        # ``ArrayContext.compute`` forces this array's output blocks onto the
+        # hierarchical layout induced by this node grid instead of the
+        # context-wide default
+        self.node_grid = node_grid
 
     # -- basic protocol ------------------------------------------------------
     @property
@@ -283,7 +315,7 @@ class GraphArray:
         for idx in self.grid.iter_indices():
             c = self.block(idx)
             out[idx] = Vertex("op", op, infer_shape(op, {}, [c.shape]), [c])
-        return GraphArray(self.ctx, self.grid, out)
+        return GraphArray(self.ctx, self.grid, out, node_grid=self.node_grid)
 
     def _scalar(self, op: str, scalar: float, reverse: bool = False) -> "GraphArray":
         out = np.empty(self.grid.grid, dtype=object)
@@ -291,7 +323,7 @@ class GraphArray:
         for idx in self.grid.iter_indices():
             c = self.block(idx)
             out[idx] = Vertex("op", "scalar", c.shape, [c], dict(meta))
-        return GraphArray(self.ctx, self.grid, out)
+        return GraphArray(self.ctx, self.grid, out, node_grid=self.node_grid)
 
     def _binary(self, op: str, other: "GraphArray") -> "GraphArray":
         a, b = self, other
@@ -300,7 +332,7 @@ class GraphArray:
             for idx in a.grid.iter_indices():
                 ca, cb = a.block(idx), b.block(idx)
                 out[idx] = Vertex("op", op, infer_shape(op, {}, [ca.shape, cb.shape]), [ca, cb])
-            return GraphArray(a.ctx, a.grid, out)
+            return GraphArray(a.ctx, a.grid, out, node_grid=a.node_grid or b.node_grid)
         # broadcasting: (q,1)/(q,) vector against (q, m) matrix along axis 0
         def _is_small(x, y) -> bool:
             if x.ndim < y.ndim:
@@ -333,7 +365,8 @@ class GraphArray:
                     meta = {expand_key: True} if expand_key else {}
                     shp = infer_shape(op, meta, [first.shape, second.shape])
                     out[idx] = Vertex("op", op, shp, [first, second], meta)
-                return GraphArray(big.ctx, big.grid, out)
+                return GraphArray(big.ctx, big.grid, out,
+                                  node_grid=big.node_grid or small.node_grid)
         raise ValueError(
             f"incompatible operands for {op}: shapes {a.shape}/{b.shape}, "
             f"grids {a.grid.grid}/{b.grid.grid}"
@@ -406,6 +439,15 @@ class GraphArray:
     def reciprocal(self):
         return self._unary("reciprocal")
 
+    def tanh(self):
+        return self._unary("tanh")
+
+    def abs(self):
+        return self._unary("abs")
+
+    def __abs__(self):
+        return self._unary("abs")
+
     # -- reductions ------------------------------------------------------------
     def sum(self, axis: Optional[int] = None) -> "GraphArray":
         return self._reduce("add", axis)
@@ -466,6 +508,16 @@ class GraphArray:
             shp = infer_shape("transpose", {"perm": perm}, [c.shape])
             blocks[oidx] = Vertex("op", "transpose", shp, [c], {"perm": perm})
         return GraphArray(self.ctx, out_grid, blocks)
+
+    # -- layout transformation (reshard subsystem) ------------------------------
+    def reshard(self, grid=None, node_grid=None) -> "GraphArray":
+        """Re-partition and/or re-distribute this array to a new
+        ``(blockshape, node_grid)`` layout via an LSHS-scheduled block-level
+        move graph (``core.reshard``).  ``node_grid=None`` asks the layout
+        tuner to pick the min-max-load factorization."""
+        from .reshard import reshard as _reshard
+
+        return _reshard(self, grid=grid, node_grid=node_grid)
 
     # -- materialization --------------------------------------------------------
     def compute(self) -> "GraphArray":

@@ -16,7 +16,7 @@ first level of every reduction tree is node-local.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -101,27 +101,127 @@ class HierarchicalLayout:
         return out
 
 
+def node_grid_factorizations(k: int, nd: int) -> List[Tuple[int, ...]]:
+    """All ordered factorizations of ``k`` into ``nd`` axis factors, in
+    lexicographic order (deterministic tie-breaking for the tuner and
+    ``default_node_grid``)."""
+    if nd <= 0:
+        return [()]
+    out: List[Tuple[int, ...]] = []
+
+    def rec(rem: int, dims: Tuple[int, ...]) -> None:
+        if len(dims) == nd - 1:
+            out.append(dims + (rem,))
+            return
+        for d in range(1, rem + 1):
+            if rem % d == 0:
+                rec(rem // d, dims + (d,))
+
+    rec(k, ())
+    return out
+
+
 def default_node_grid(grid: ArrayGrid, cluster: ClusterSpec) -> NodeGrid:
     """Factor the node count to (approximately) match the block-grid shape.
 
     Mirrors the paper's guidance: for row-partitioned (q, 1) grids use
     (k, 1); for square (g, g) grids use the most square factorization of k.
-    """
+    The node count is factored over *all* grid axes (a (1, 1, q)-partitioned
+    3-D tensor gets (1, 1, k), not a 2-D (g1, g2, 1) mis-layout)."""
     k = cluster.num_nodes
     nd = max(grid.ndim, 1)
     if nd == 1:
         return NodeGrid((k,))
-    # choose a factorization of k with aspect ratio closest to the grid's
+    # choose the factorization of k with aspect ratio closest to the grid's
     best = None
     target = [g for g in grid.grid] + [1] * (nd - grid.ndim)
-    for g1 in range(1, k + 1):
-        if k % g1:
-            continue
-        g2 = k // g1
-        dims = (g1, g2) + (1,) * (nd - 2)
+    for dims in node_grid_factorizations(k, nd):
         score = 0.0
         for t, d in zip(target, dims):
             score += abs(np.log((t + 1e-9) / d))
         if best is None or score < best[0]:
             best = (score, dims)
     return NodeGrid(best[1])
+
+
+# ---------------------------------------------------------------------------
+# Load-simulated layout tuner (paper §4's heuristic, measured instead of
+# hard-coded): score every node-grid factorization against the *live*
+# cluster state and pick the min-max-load layout for an upcoming op.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LayoutChoice:
+    """Tuner verdict for one candidate node grid."""
+
+    node_grid: NodeGrid
+    max_load: float          # max per-node elements after adopting the layout
+    moved_elements: float    # simulated transfer volume to reach it
+    comm_seconds: float      # α-β-γ time for those transfers (bounds.CommModel)
+    objective: float         # summed Eq.2 objective over the simulated moves
+
+
+def tune_node_grid(
+    grid: ArrayGrid,
+    cluster: ClusterSpec,
+    state=None,
+    sources: Optional[Dict[Index, Sequence[int]]] = None,
+    comm=None,
+) -> LayoutChoice:
+    """Pick a node grid for laying out ``grid`` on ``cluster``.
+
+    Candidates are every factorization of the node count over the grid's
+    axes.  Without ``state``, scoring is pure balance (min-max block
+    elements per node — the paper's §4 heuristic).  With ``state`` (a live
+    ``ClusterState``) and ``sources`` (dest block index -> object ids of the
+    source blocks an upcoming reshard/op would pull into that block), every
+    candidate's destination placements are additionally scored with
+    ``ClusterState.simulate_cost_batch`` — one vectorized call per
+    destination block covering *all* candidates — so the choice reflects
+    current residency, per-node load, and link/clock congestion.  Transfer
+    time is priced with the α-β-γ ``bounds.CommModel``.  Scoring is
+    first-order: each non-resident source is priced at its whole stored
+    block size (the residency signal), not at the sliver a move graph would
+    actually slice out of it.
+
+    Keys are minimized lexicographically: (max load, moved elements,
+    comm seconds, objective, dims).  A layout that matches where the data
+    already lives moves zero bytes, so on a balance tie the status quo wins
+    and reshard degenerates to a no-op.
+    """
+    from .bounds import CommModel
+
+    comm = comm or CommModel()
+    k = cluster.num_nodes
+    nd = max(grid.ndim, 1)
+    cands = [NodeGrid(dims) for dims in node_grid_factorizations(k, nd)]
+    n = len(cands)
+    layouts = [HierarchicalLayout(grid, ng, cluster) for ng in cands]
+    base_mem = (np.asarray(state.S[:, 0]) if state is not None
+                else np.zeros(k))
+    max_load = np.empty(n)
+    for i, lay in enumerate(layouts):
+        max_load[i] = float((base_mem + lay.load_per_node()).max())
+    moved = np.zeros(n)
+    comm_s = np.zeros(n)
+    objective = np.zeros(n)
+    if state is not None and sources:
+        n_moves = np.zeros(n)
+        for didx, in_ids in sources.items():
+            dest_nodes = [lay.node_of(didx) for lay in layouts]
+            out_elements = grid.block_elements(didx)
+            obj_b, mv_b, _est, _load = state.simulate_cost_batch(
+                dest_nodes, out_elements, list(in_ids))
+            moved += mv_b
+            objective += obj_b
+            nz = mv_b > 0
+            n_moves += nz
+            comm_s[nz] += comm.alpha + comm.beta * mv_b[nz] * comm.bytes_per_element
+        comm_s += comm.gamma * n_moves
+    best = min(
+        range(n),
+        key=lambda i: (max_load[i], moved[i], comm_s[i], objective[i],
+                       cands[i].dims),
+    )
+    return LayoutChoice(cands[best], float(max_load[best]), float(moved[best]),
+                        float(comm_s[best]), float(objective[best]))

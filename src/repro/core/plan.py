@@ -52,6 +52,8 @@ from dataclasses import dataclass, field
 from time import perf_counter
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .graph_array import Vertex, _next_id
 
 # step tags (plain ints keep plan steps as small tuples)
@@ -241,6 +243,8 @@ def _hashable(val):
     — go through the interner."""
     if isinstance(val, (bool, int)):
         return val
+    if isinstance(val, np.integer):  # reshard offsets etc. may be numpy ints
+        return int(val)
     if isinstance(val, float):
         return (-13, val)
     if isinstance(val, str):
@@ -408,6 +412,11 @@ class SchedStats:
     sched_cold_s: float = 0.0   # wall time of cold schedule() calls (incl dispatch)
     replay_s: float = 0.0       # wall time of plan replays (incl dispatch)
     dispatch_s: float = 0.0     # transition + run_op time inside either path
+    # reshard subsystem accounting (``core.reshard``): move-graph schedules,
+    # move ops emitted, and the network elements those schedules transferred
+    reshards: int = 0
+    reshard_ops: int = 0
+    reshard_moved_elements: float = 0.0
 
     @property
     def scheduling_overhead_s(self) -> float:
@@ -428,6 +437,9 @@ class SchedStats:
             "replay_s": self.replay_s,
             "dispatch_s": self.dispatch_s,
             "sched_overhead_s": self.scheduling_overhead_s,
+            "reshards": self.reshards,
+            "reshard_ops": self.reshard_ops,
+            "reshard_moved_elements": self.reshard_moved_elements,
         }
 
     def reset(self) -> None:
@@ -438,3 +450,6 @@ class SchedStats:
         self.sched_cold_s = 0.0
         self.replay_s = 0.0
         self.dispatch_s = 0.0
+        self.reshards = 0
+        self.reshard_ops = 0
+        self.reshard_moved_elements = 0.0

@@ -143,9 +143,11 @@ class SchedulerBase:
     def _placement_options(self, v: Vertex, state: ClusterState) -> List[int]:
         """Paper §4 last ¶: unary-like ops have a single option; binary
         elementwise on co-located operands collapses to one option; algebra
-        ops offer the union of all nodes on which any operand resides."""
+        ops — and ``concat_blocks`` assembly vertices from the reshard
+        subsystem, whose pieces may be cached on several nodes — offer the
+        union of all nodes on which any operand resides."""
         homes = [state.home[c.vid][0] for c in v.children]
-        if v.op in ("matmul", "tensordot", "einsum"):
+        if v.op in ("matmul", "tensordot", "einsum", "concat_blocks"):
             opts: Set[int] = set()
             for c in v.children:
                 opts |= state.nodes_of(c.vid)

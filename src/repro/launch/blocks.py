@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core import ArrayContext, ClusterSpec
 from repro.launch.workloads import (
+    cpals_loop,
     dgemm_graph,
     dgemm_loop,
     logreg_newton_graph,
@@ -35,7 +36,8 @@ from repro.launch.workloads import (
 )
 
 
-def build_workload(ctx: ArrayContext, workload: str, scale: int, iters: int = 1):
+def build_workload(ctx: ArrayContext, workload: str, scale: int, iters: int = 1,
+                   reshard_method: str = "reshard"):
     if workload == "logreg":
         n, d, q = 1 << (10 + scale), 64, 8 * ctx.cluster.num_nodes
         if iters > 1:
@@ -48,12 +50,17 @@ def build_workload(ctx: ArrayContext, workload: str, scale: int, iters: int = 1)
         if iters > 1:
             return dgemm_loop(ctx, dim, g, iters=iters)
         return dgemm_graph(ctx, dim, g)
+    if workload == "cpals":
+        dim = 16 << scale
+        return cpals_loop(ctx, dim, rank=8, q=ctx.cluster.num_nodes,
+                          iters=max(iters, 1), method=reshard_method)
     raise ValueError(f"unknown workload {workload!r}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--workload", default="logreg", choices=("logreg", "dgemm"))
+    ap.add_argument("--workload", default="logreg",
+                    choices=("logreg", "dgemm", "cpals"))
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--scheduler", default="lshs",
@@ -67,6 +74,13 @@ def main() -> None:
     ap.add_argument("--plan-cache", dest="plan_cache", action="store_true",
                     help="cache placement plans by structural fingerprint "
                          "and replay them on repeat graphs")
+    ap.add_argument("--reshard-method", default="reshard",
+                    choices=("reshard", "naive"),
+                    help="cpals layout changes: locality-aware move graphs "
+                         "vs the all-to-all gather/scatter baseline")
+    ap.add_argument("--auto-layout", dest="auto_layout", action="store_true",
+                    help="per-array node grids from default_node_grid "
+                         "instead of the context-wide node grid")
     group = ap.add_mutually_exclusive_group()
     group.add_argument("--pipeline", dest="pipeline", action="store_true",
                        help="queue ops and drain via the async event loop")
@@ -85,8 +99,10 @@ def main() -> None:
         seed=args.seed,
         pipeline=args.pipeline,
         plan_cache=args.plan_cache,
+        auto_layout=args.auto_layout,
     )
-    out = build_workload(ctx, args.workload, args.scale, iters=args.iters)
+    out = build_workload(ctx, args.workload, args.scale, iters=args.iters,
+                         reshard_method=args.reshard_method)
 
     if args.fail_node is not None:
         if args.backend != "numpy":

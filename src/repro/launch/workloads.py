@@ -72,6 +72,27 @@ def logreg_newton_loop(ctx: ArrayContext, n: int, d: int, q: int,
     return g, H, beta
 
 
+def cpals_loop(ctx: ArrayContext, dim: int, rank: int = 8, q: int = 4,
+               iters: int = 3, method: str = "reshard",
+               reset_loads: bool = True):
+    """``iters`` full CP-ALS sweeps (all three mode updates via
+    matricization + reshard, ``repro.factor``) on a ``(q, 1, 1)``-partitioned
+    ``dim³`` tensor — the reshard subsystem's flagship iterative workload:
+    the in-loop factor gathers repeat structurally, so ``--plan-cache``
+    replays their move graphs from sweep 2 on.  ``method="naive"`` swaps in
+    the all-to-all gather/scatter baseline for the moved-bytes ablation.
+
+    Returns the mode-0 factor GraphArray."""
+    from repro.factor import cp_als
+
+    X = ctx.random((dim, dim, dim), grid=(q, 1, 1))
+    if reset_loads:
+        ctx.reset_loads()
+    res = cp_als(X, rank=rank, iters=max(iters, 1), method=method,
+                 track_fit=False)
+    return res.factors[0]
+
+
 def dgemm_loop(ctx: ArrayContext, dim: int, g: int, iters: int = 10,
                reset_loads: bool = True):
     """Repeated C = A @ B on fixed operands.  Each iteration spreads a few

@@ -1,4 +1,4 @@
 """Tensor algebra applications (paper §8.4)."""
-from .ops import double_contraction, mttkrp
+from .ops import double_contraction, mttkrp, mttkrp_mode
 
-__all__ = ["double_contraction", "mttkrp"]
+__all__ = ["double_contraction", "mttkrp", "mttkrp_mode"]
