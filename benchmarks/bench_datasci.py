@@ -10,6 +10,7 @@ import numpy as np
 from repro.core import ArrayContext, ClusterSpec, auto_grid
 from repro.glm import LogisticRegression, paper_bimodal
 
+from . import common
 from .common import emit, timeit
 
 
@@ -32,7 +33,7 @@ def run(quick: bool = True) -> None:
 
     def nums_pipeline():
         ctx = ArrayContext(cluster=ClusterSpec(4, 8), node_grid=(4, 1),
-                           backend="numpy")
+                           backend=common.BACKEND)
         model = LogisticRegression(ctx, solver="newton", max_iter=3, reg=1e-6)
         Xg = ctx.from_numpy(X)   # auto-partitioned (softmax grid)
         yg = ctx.from_numpy(y, grid=(Xg.grid.grid[0], 1))

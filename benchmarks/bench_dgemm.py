@@ -23,7 +23,7 @@ def run(quick: bool = True) -> None:
         def measured():
             ctx = ArrayContext(cluster=ClusterSpec(4, 4), node_grid=(2, 2),
                                scheduler="lshs" if algo == "summa" else algo,
-                               backend="numpy", pipeline=common.PIPELINE)
+                               backend=common.BACKEND, pipeline=common.PIPELINE)
             A = ctx.random((dim, dim), grid=(4, 4))
             B = ctx.random((dim, dim), grid=(4, 4))
             if algo == "summa":

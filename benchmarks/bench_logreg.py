@@ -39,7 +39,7 @@ def run(quick: bool = True) -> None:
     for solver in ("newton", "lbfgs"):
         def fit():
             ctx = ArrayContext(cluster=ClusterSpec(4, 8), node_grid=(4, 1),
-                               backend="numpy", pipeline=common.PIPELINE)
+                               backend=common.BACKEND, pipeline=common.PIPELINE)
             m = LogisticRegression(ctx, solver=solver, max_iter=iters, reg=1e-6)
             m.fit_numpy(X, y, row_blocks=16)
 
@@ -52,7 +52,7 @@ def run(quick: bool = True) -> None:
 
     def fit_cached():
         ctx = ArrayContext(cluster=ClusterSpec(4, 8), node_grid=(4, 1),
-                           backend="numpy", pipeline=common.PIPELINE,
+                           backend=common.BACKEND, pipeline=common.PIPELINE,
                            plan_cache=True)
         m = LogisticRegression(ctx, solver="newton", max_iter=iters, reg=1e-6)
         m.fit_numpy(X, y, row_blocks=16)

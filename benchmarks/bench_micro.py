@@ -104,6 +104,81 @@ def pipeline_ablation(n=1 << 14, d=64, k=4, r=4, emit_rows=True) -> dict:
     return out
 
 
+def backend_matmul_row(n=2048, d=1024, q=4, repeats=5, emit_rows=True) -> dict:
+    """The compiled-backend matmul row (``--backend`` ablation): operands are
+    created once and the timed region is the scheduled block matmul itself
+    (X.T@X: q block GEMMs + a locality-paired reduce), with a readiness
+    barrier so async backends are charged their compute.  The warm-up run
+    populates the structural compile cache, so the row measures the steady
+    state an iterative workload sees; compile time is reported separately.
+    Each backend runs at its natural dtype (f64 numpy reference vs f32
+    compiled jax/pallas) — the documented substrate comparison."""
+    be = common.BACKEND
+    ctx = _ctx("lshs", be, k=2, r=2)
+    X = ctx.random((n, d), grid=(q, 1))
+    _run_op(ctx, "X.T@X", X, X).wait()  # warm-up: compiles + first dispatch
+
+    t = timeit(lambda: _run_op(ctx, "X.T@X", X, X).wait(), repeats=repeats)
+    ld = ctx.loads()
+    row = {
+        "backend": be,
+        "dtype": ctx.dtype,
+        "us_per_call": t * 1e6,
+        "n_rfc": ld["n_rfc"],
+        "compile_hit_rate": ld.get("compile_hit_rate", 0.0),
+        "compile_s": ld.get("compile_s", 0.0),
+        "jit_calls": ld.get("backend_jit_calls", 0),
+    }
+    if emit_rows:
+        emit(
+            f"micro.backend.matmul.{be}", t * 1e6,
+            f"dtype={ctx.dtype};n_rfc={ld['n_rfc']};"
+            f"compile_hit_rate={row['compile_hit_rate']:.3f};"
+            f"compile_s={row['compile_s']:.3f}",
+        )
+    return row
+
+
+def _fused_chain_dispatches(fuse: bool, backend: str = "jax") -> int:
+    """Compiled-callable dispatch count for a 3-op elementwise chain per
+    block: 1 with fusion (one composed jitted callable), 3 without (per-op
+    interpreter-style dispatch) — deterministic, the CI bench-smoke gate."""
+    ctx = ArrayContext(cluster=ClusterSpec(2, 2), node_grid=(2, 1),
+                       backend=backend, fuse=fuse)
+    x = ctx.random((256, 256), grid=(2, 2))
+    stats = ctx.executor.backend.stats
+    before = stats.jit_calls
+    x.exp().relu().sqrt().compute().wait()
+    return stats.jit_calls - before
+
+
+def backend_section() -> dict:
+    """Per-backend smoke comparison for the bench-smoke artifact: measured
+    wall time of one scheduled micro op per backend (numpy interpreter vs
+    compiled jax), the jax compile-cache hit rate, and the fused-chain
+    dispatch ablation the CI job asserts on."""
+    out = {}
+    for be in ("numpy", "jax"):
+        ctx = _ctx("lshs", be, k=2, r=2)
+        A, B = _operands(ctx, "X+Y", 1 << 10)
+        _run_op(ctx, "X+Y", A, B).wait()
+        t = timeit(lambda: _run_op(ctx, "X+Y", A, B).wait(), repeats=3)
+        ld = ctx.loads()
+        out[be] = {
+            "measured_add_us": t * 1e6,
+            "dtype": ctx.dtype,
+            "makespan": ld["makespan"],
+            "n_rfc": ld["n_rfc"],
+            "compile_hit_rate": ld.get("compile_hit_rate", 0.0),
+            "backend_jit_calls": ld.get("backend_jit_calls", 0),
+        }
+    out["fused_chain"] = {
+        "interp_dispatches": _fused_chain_dispatches(fuse=False),
+        "fused_dispatches": _fused_chain_dispatches(fuse=True),
+    }
+    return out
+
+
 def smoke() -> dict:
     """Tiny-grid smoke run for CI: dispatch counts and makespans per
     scheduler on the logreg graph, one measured micro op, and the plan-cache
@@ -122,17 +197,18 @@ def smoke() -> dict:
     result["plan_cache"] = bench_overhead.plan_cache_comparison(
         quick=True, emit_rows=False)
     result["reshard"] = bench_tensor.reshard_smoke()
+    result["backend"] = backend_section()
     return result
 
 
 def run(quick: bool = True) -> None:
     for op in OPS:
         for sched in ("lshs", "roundrobin", "dynamic"):
-            # measured wall time (small scale, numpy blocks)
+            # measured wall time (small scale, data-holding backend blocks)
             def measured():
-                ctx = _ctx(sched, "numpy")
+                ctx = _ctx(sched, common.BACKEND)
                 A, B = _operands(ctx, op, MEAS_N // 64)
-                _run_op(ctx, op, A, B)
+                _run_op(ctx, op, A, B).wait()
 
             t = timeit(measured, repeats=3 if quick else 7)
 
@@ -152,6 +228,10 @@ def run(quick: bool = True) -> None:
     # sync-vs-pipelined dispatch ablation on the logreg workload (Fig. 15
     # graph): the overlap win LSHS's placement enables
     pipeline_ablation(n=SIM_ROWS if quick else SIM_ROWS * 4)
+
+    # compiled-backend matmul row (interpreter vs jax.jit/pallas substrate):
+    # compare ``--backend numpy`` vs ``--backend jax`` runs on this row
+    backend_matmul_row(repeats=5 if quick else 9)
 
 
 if __name__ == "__main__":

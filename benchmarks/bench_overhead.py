@@ -21,6 +21,7 @@ import numpy as np
 from repro.core import ArrayContext, ClusterSpec
 from repro.launch.workloads import logreg_newton_loop
 
+from . import common
 from .common import emit, timeit
 
 
@@ -41,7 +42,8 @@ def run(quick: bool = True) -> None:
     x_np = np.random.default_rng(0).standard_normal(n)
     t_np = timeit(lambda: -x_np, repeats=5)
 
-    ctx = ArrayContext(cluster=ClusterSpec(1, 1), node_grid=(1,), backend="numpy")
+    ctx = ArrayContext(cluster=ClusterSpec(1, 1), node_grid=(1,),
+                       backend=common.BACKEND)
     x = ctx.from_numpy(x_np, grid=(1,))
     t_rfc = timeit(lambda: (-x).compute(), repeats=5)
     emit("overhead.rfc.neg", t_rfc * 1e6,

@@ -7,6 +7,7 @@ import numpy as np
 from repro.core import ArrayContext, ClusterSpec
 from repro.linalg import tsqr_direct, tsqr_indirect
 
+from . import common
 from .common import emit, timeit
 
 
@@ -20,7 +21,7 @@ def run(quick: bool = True) -> None:
     for name, fn in (("direct", tsqr_direct), ("indirect", tsqr_indirect)):
         def run_one():
             ctx = ArrayContext(cluster=ClusterSpec(4, 4), node_grid=(4, 1),
-                               backend="numpy")
+                               backend=common.BACKEND)
             X = ctx.from_numpy(x_np, grid=(16, 1))
             fn(ctx, X)
 

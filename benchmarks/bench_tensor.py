@@ -11,6 +11,7 @@ from repro.core import ArrayContext, ClusterSpec, reshard, reshard_naive
 from repro.factor import cp_als
 from repro.tensor import double_contraction, mttkrp
 
+from . import common
 from .common import emit, timeit
 
 K, R = 16, 32
@@ -63,7 +64,7 @@ def run(quick: bool = True) -> None:
         for sched in ("lshs", "roundrobin"):
             def measured():
                 ctx = ArrayContext(cluster=ClusterSpec(4, 4), node_grid=(4, 1, 1),
-                                   scheduler=sched, backend="numpy")
+                                   scheduler=sched, backend=common.BACKEND)
                 if op == "mttkrp":
                     X = ctx.random((dim, dim, dim), grid=(4, 1, 1))
                     B = ctx.random((dim, 16), grid=(1, 1))
@@ -100,7 +101,7 @@ def run(quick: bool = True) -> None:
     for method in ("reshard", "naive"):
         def measured_cp():
             ctx = ArrayContext(cluster=ClusterSpec(4, 4), node_grid=(4, 1, 1),
-                               backend="numpy", seed=0)
+                               backend=common.BACKEND, seed=0)
             X = ctx.random((dim_cp, dim_cp, dim_cp), grid=(4, 1, 1))
             cp_als(X, rank=8, iters=iters_cp, method=method, seed=1,
                    track_fit=False)

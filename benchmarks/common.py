@@ -16,10 +16,22 @@ ROWS: List[str] = []
 # ``run.py --pipeline`` so the sync-vs-pipelined ablation is one flag.
 PIPELINE: bool = False
 
+# Block-kernel execution backend for every suite's *measured* (data-holding)
+# contexts: "numpy" (reference interpreter), "jax" (compiled jax.jit
+# kernels), or "pallas" (jax + Pallas matmul).  Set once by
+# ``run.py --backend`` so the interpreter-vs-compiled ablation is one flag;
+# simulated-regime contexts stay metadata-only regardless.
+BACKEND: str = "numpy"
+
 
 def set_pipeline(on: bool) -> None:
     global PIPELINE
     PIPELINE = bool(on)
+
+
+def set_backend(name: str) -> None:
+    global BACKEND
+    BACKEND = name
 
 
 def timeit(fn: Callable[[], object], repeats: int = 5) -> float:

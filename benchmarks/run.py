@@ -64,13 +64,20 @@ def main() -> None:
     ap.add_argument("--only", default=None, choices=list(SUITES))
     ap.add_argument("--pipeline", action="store_true",
                     help="pipelined executor (queued dispatch, overlap drain)")
+    ap.add_argument("--backend", default="numpy",
+                    choices=("numpy", "jax", "pallas"),
+                    help="block-kernel backend for measured contexts "
+                         "(repro.backend); each runs at its natural dtype — "
+                         "f64 numpy reference vs f32 compiled jax/pallas")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-grid CI subset (micro pipeline ablation)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as a JSON artifact")
     args = ap.parse_args()
     common.set_pipeline(args.pipeline)
-    meta = {"pipeline": args.pipeline, "smoke": args.smoke}
+    common.set_backend(args.backend)
+    meta = {"pipeline": args.pipeline, "smoke": args.smoke,
+            "backend": args.backend}
     t0 = time.time()
     if args.smoke:
         smoke = bench_micro.smoke()
@@ -90,6 +97,13 @@ def main() -> None:
               f"naive={rs['naive_moved']:.0f} "
               f"cpals moved={rs['cpals_reshard_moved']:.0f} "
               f"naive={rs['cpals_naive_moved']:.0f}", flush=True)
+        be = smoke["backend"]
+        fc = be["fused_chain"]
+        print(f"# smoke backend jax add={be['jax']['measured_add_us']:.0f}us "
+              f"numpy add={be['numpy']['measured_add_us']:.0f}us "
+              f"compile_hit_rate={be['jax']['compile_hit_rate']:.3f} "
+              f"fused_dispatches={fc['fused_dispatches']} "
+              f"interp_dispatches={fc['interp_dispatches']}", flush=True)
         if args.json:
             _write_json(args.json, {**meta, "smoke_result": smoke})
         print(f"# total {time.time() - t0:.1f}s", flush=True)

@@ -1,0 +1,251 @@
+"""The jax backend: per-op ``jax.jit`` with device-resident block storage.
+
+Blocks stay ``jax.Array``s end-to-end: ``from_host`` commits a host block to
+its placement's device once at creation, every block op executes as a
+compiled XLA callable over device-resident operands, and values only return
+to the host at ``assemble``/``to_numpy`` time.  There is no per-op
+device->host->numpy->``device_put`` round-trip — the regression test counts
+``stats.h2d``/``stats.d2h`` across op execution to pin this down.
+
+Compilations are memoized in the structural compile cache
+(``compile_cache.GLOBAL_COMPILE_CACHE``): key = op kind + interned canonical
+metadata + input (shape, dtype) signature, so an iterative workload compiles
+each distinct block kernel once and dispatches cached executables ever
+after.  ``fused`` vertex chains lower through ``graph_array.apply_chain``
+with jnp op tables *inside* one traced function, so a chain of n elementwise
+ops is a single XLA fusion and a single dispatch (vs n interpreter steps).
+
+Placements map node -> ``jax.Device`` (node i -> ``devices[i % len]``); on a
+single-device host every node shares device 0 and operand moves are no-ops.
+
+dtype: jax defaults to float32; requesting ``float64`` enables jax's
+process-global x64 mode (``jax.config.update("jax_enable_x64", True)``) so
+the backend can be bit-comparable to the numpy reference — see
+``ArrayContext``'s dtype documentation for the trade-off.
+"""
+from __future__ import annotations
+
+from time import perf_counter
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph_array import apply_chain, execute_block_op
+
+from .base import BlockBackend
+from .compile_cache import GLOBAL_COMPILE_CACHE, CompileCache, structural_key
+
+
+def _jnp_tables(jnp):
+    """jnp mirrors of ``graph_array._UNARY`` / ``_BINARY`` (same formulas, so
+    f64 results agree with numpy to rounding of the same order)."""
+    unary = {
+        "neg": lambda x: -x,
+        "exp": jnp.exp,
+        "log": jnp.log,
+        "sqrt": jnp.sqrt,
+        "abs": jnp.abs,
+        "square": jnp.square,
+        "sigmoid": lambda x: jnp.exp(-jnp.logaddexp(0.0, -x)),
+        "tanh": jnp.tanh,
+        "identity": lambda x: x,
+        "softplus": lambda x: jnp.logaddexp(0.0, x),
+        "relu": lambda x: jnp.maximum(x, 0.0),
+        "rsqrt": lambda x: 1.0 / jnp.sqrt(x),
+        "reciprocal": lambda x: 1.0 / x,
+    }
+    binary = {
+        "add": jnp.add,
+        "sub": jnp.subtract,
+        "mul": jnp.multiply,
+        "div": jnp.divide,
+        "pow": jnp.power,
+        "maximum": jnp.maximum,
+        "minimum": jnp.minimum,
+    }
+    return unary, binary
+
+
+class JaxBackend(BlockBackend):
+    name = "jax"
+    _salt = "jax"  # compile-cache flavor for this backend's lowerings
+
+    def __init__(self, dtype: str = "float32", devices: Optional[list] = None,
+                 cache: Optional[CompileCache] = None):
+        super().__init__(dtype)
+        import jax
+        import jax.numpy as jnp
+
+        if dtype == "float64" and not jax.config.jax_enable_x64:
+            # process-global: f64 blocks require x64 mode (weak-typed f32
+            # kernels elsewhere in the process are unaffected)
+            jax.config.update("jax_enable_x64", True)
+        self._jax = jax
+        self._jnp = jnp
+        self._devices = list(devices) if devices else jax.devices()
+        self._unary, self._binary = _jnp_tables(jnp)
+        self._cache = cache if cache is not None else GLOBAL_COMPILE_CACHE
+
+    # -- storage ------------------------------------------------------------
+    def device_of(self, placement: Tuple[int, int]):
+        return self._devices[placement[0] % len(self._devices)]
+
+    def from_host(self, arr: np.ndarray, placement: Tuple[int, int]):
+        self.stats.h2d += 1
+        arr = np.asarray(arr, dtype=self.dtype)
+        return self._jax.device_put(arr, self.device_of(placement))
+
+    def to_host(self, value) -> np.ndarray:
+        self.stats.d2h += 1
+        return np.asarray(value)
+
+    def wait(self, value) -> None:
+        self._jax.block_until_ready(value)
+
+    # -- execution ----------------------------------------------------------
+    def execute(self, op: str, meta: Dict[str, Any], inputs: Sequence[Any],
+                placement: Tuple[int, int]):
+        return self._dispatch(self._salt, op, meta, inputs, placement,
+                              self._build)
+
+    def _dispatch(self, salt: str, op: str, meta: Dict[str, Any],
+                  inputs: Sequence[Any], placement: Tuple[int, int],
+                  build: Callable[[str, Dict[str, Any]], Optional[Callable]]):
+        """The one compile-cached dispatch protocol (shared with subclasses
+        that contribute their own lowerings under a different ``salt``)."""
+        self.stats.dispatches += 1
+        inputs = self._colocate(inputs, placement)
+        key = structural_key(salt, op, meta, self._signature(inputs))
+        fn = self._cache.get(key)
+        if fn is not None:
+            self.stats.jit_calls += 1
+            return fn(*inputs)
+        builder = build(op, meta)
+        if builder is None:  # interpreter fallback (host round-trip, counted)
+            self.stats.fallbacks += 1
+            out = execute_block_op(op, meta, [self.to_host(x) for x in inputs])
+            return self.from_host(out, placement)
+        jitted = self._jax.jit(builder)
+        t0 = perf_counter()
+        self.stats.jit_calls += 1
+        out = jitted(*inputs)
+        self._jax.block_until_ready(out)  # charge compile+first-run to compile_s
+        self._cache.put(key, jitted, compile_seconds=perf_counter() - t0)
+        return out
+
+    def _signature(self, inputs) -> Tuple[Tuple[Tuple[int, ...], str], ...]:
+        return tuple((tuple(x.shape), str(x.dtype)) for x in inputs)
+
+    def _colocate(self, inputs, placement):
+        """Move operands onto the placement's device (no-op on one device;
+        the scheduler already minimized these moves — they mirror the
+        transfers ``ClusterState.transition`` accounted)."""
+        if len(self._devices) == 1:
+            return list(inputs)
+        dev = self.device_of(placement)
+        out = []
+        for x in inputs:
+            if getattr(x, "devices", None) is not None and x.devices() != {dev}:
+                x = self._jax.device_put(x, dev)
+                self.stats.device_moves += 1
+            out.append(x)
+        return out
+
+    # -- lowering ------------------------------------------------------------
+    def _build(self, op: str, meta: Dict[str, Any]) -> Optional[Callable]:
+        """Return a pure jax-traceable callable implementing one block op
+        (metadata baked in; shapes/dtypes fixed by the cache key)."""
+        jnp = self._jnp
+        if op in self._unary:
+            return self._unary[op]
+        if op in self._binary:
+            fn = self._binary[op]
+            ea, eb = bool(meta.get("expand_a")), bool(meta.get("expand_b"))
+
+            def binary(a, b, fn=fn, ea=ea, eb=eb):
+                if ea:
+                    a = a[..., None]
+                if eb:
+                    b = b[..., None]
+                return fn(a, b)
+
+            return binary
+        if op == "scalar":
+            fn = self._binary[meta["op"]]
+            s = meta["scalar"]
+            if meta.get("reverse"):
+                return lambda x: fn(s, x)
+            return lambda x: fn(x, s)
+        if op == "matmul":
+            ta, tb = bool(meta.get("ta")), bool(meta.get("tb"))
+
+            def matmul(a, b):
+                if ta:
+                    a = jnp.swapaxes(a, -1, -2)
+                if tb:
+                    b = jnp.swapaxes(b, -1, -2)
+                return a @ b
+
+            return matmul
+        if op == "reduce_axis":
+            axis = meta["axis"]
+            red = {"add": jnp.sum, "maximum": jnp.max, "minimum": jnp.min}[
+                meta.get("op", "add")]
+            return lambda x: red(x, axis=axis)
+        if op == "transpose":
+            perm = meta.get("perm")
+            return lambda x: jnp.transpose(x, perm)
+        if op == "tensordot":
+            axes = meta["axes"]
+            return lambda a, b: jnp.tensordot(a, b, axes=axes)
+        if op == "einsum":
+            spec = meta["spec"]
+            return lambda *xs: jnp.einsum(spec, *xs)
+        if op == "fused":
+            chain = meta["chain"]
+            return lambda x: apply_chain(x, chain, self._unary, self._binary)
+        if op == "qr_r":
+            return lambda x: jnp.linalg.qr(x, mode="r")
+        if op == "qr_q":
+            return lambda x: jnp.linalg.qr(x)[0]
+        if op == "qr_stackr":
+            return lambda *xs: jnp.linalg.qr(
+                jnp.concatenate(xs, axis=0), mode="r")
+        if op == "stack":
+            return lambda *xs: jnp.concatenate(xs, axis=0)
+        if op == "slice_rows":
+            start, stop = meta["start"], meta["stop"]
+            return lambda x: x[start:stop]
+        if op == "slice":
+            idx = tuple(slice(int(a), int(b))
+                        for a, b in zip(meta["starts"], meta["stops"]))
+            return lambda x: x[idx]
+        if op == "concat_blocks":
+            shape = tuple(int(s) for s in meta["shape"])
+            offsets = [tuple(int(o) for o in off) for off in meta["offsets"]]
+
+            def concat_blocks(*pieces):
+                out = jnp.zeros(shape, dtype=pieces[0].dtype)
+                for off, piece in zip(offsets, pieces):
+                    out = out.at[tuple(
+                        slice(o, o + s) for o, s in zip(off, piece.shape)
+                    )].set(piece)
+                return out
+
+            return concat_blocks
+        if op == "matricize":
+            mode = meta["mode"]
+            return lambda x: jnp.moveaxis(x, mode, 0).reshape(
+                x.shape[mode], -1)
+        if op == "khatri_rao":
+            return lambda a, b: jnp.einsum("jf,kf->jkf", a, b).reshape(
+                a.shape[0] * b.shape[0], a.shape[1])
+        if op == "solve":
+            return lambda h, g: jnp.linalg.solve(h, g)
+        if op == "rsolve":
+            return lambda x, r: jnp.linalg.solve(r.T, x.T).T
+        return None
+
+    @property
+    def compile_cache(self) -> Optional[CompileCache]:
+        return self._cache

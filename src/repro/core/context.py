@@ -12,6 +12,7 @@ data layout; numerical expressions are scheduled on ``compute()``.
 """
 from __future__ import annotations
 
+import os
 import random
 import zlib
 from time import perf_counter
@@ -41,7 +42,7 @@ class ArrayContext:
         cluster: ClusterSpec = ClusterSpec(1, 1),
         node_grid: Optional[Union[NodeGrid, Tuple[int, ...]]] = None,
         scheduler: Union[str, SchedulerBase] = "lshs",
-        backend: str = "numpy",
+        backend: Optional[str] = None,
         system: str = "ray",
         cost_model: Optional[CostModel] = None,
         seed: int = 0,
@@ -49,7 +50,23 @@ class ArrayContext:
         pipeline: bool = False,
         plan_cache: Union[bool, PlanCache] = False,
         auto_layout: bool = False,
+        dtype: Optional[str] = None,
     ):
+        # backend: the block-kernel execution substrate (``repro.backend``):
+        # "numpy" (reference interpreter), "jax" (compiled, device-resident),
+        # "pallas" (jax + Pallas matmul kernels), or "sim" (metadata only).
+        # ``REPRO_BACKEND``/``REPRO_DTYPE`` set process-wide defaults (the CI
+        # tests-jax-backend job runs the whole tier-1 suite this way).
+        #
+        # dtype: block element type.  ``None`` picks the backend's natural
+        # dtype — float64 for numpy (the bit-exact oracle) and float32 for
+        # jax/pallas (the accelerator-native type).  Requesting float64 on
+        # jax enables jax's process-global x64 mode; parity tests do exactly
+        # that, while f32 runs assert with dtype-aware tolerances.
+        if backend is None:
+            backend = os.environ.get("REPRO_BACKEND") or "numpy"
+        if dtype is None:
+            dtype = os.environ.get("REPRO_DTYPE") or None
         self.cluster = cluster
         if node_grid is None:
             node_grid = NodeGrid((cluster.num_nodes,))
@@ -60,7 +77,10 @@ class ArrayContext:
         self.node_grid = node_grid
         self.state = ClusterState(cluster, cost_model=cost_model, system=system)
         self.pipeline = pipeline
-        self.executor = Executor(mode=backend, seed=seed, pipeline=pipeline)
+        self.backend = backend
+        self.executor = Executor(mode=backend, seed=seed, pipeline=pipeline,
+                                 dtype=dtype)
+        self.dtype = self.executor.dtype
         self.scheduler = (
             scheduler
             if isinstance(scheduler, SchedulerBase)
@@ -108,9 +128,9 @@ class ArrayContext:
     ) -> GraphArray:
         shape = tuple(int(s) for s in shape)
         if grid is None:
-            agrid = auto_grid(shape, self.cluster.num_workers)
+            agrid = auto_grid(shape, self.cluster.num_workers, dtype=self.dtype)
         else:
-            agrid = ArrayGrid(shape, tuple(int(g) for g in grid))
+            agrid = ArrayGrid(shape, tuple(int(g) for g in grid), self.dtype)
         ng = default_node_grid(agrid, self.cluster) if self.auto_layout else None
         layout = self._layout(agrid, ng)
         blocks = np.empty(agrid.grid if agrid.grid else (), dtype=object)
@@ -141,7 +161,7 @@ class ArrayContext:
         return self._create(shape, grid, "uniform")
 
     def from_numpy(self, arr: np.ndarray, grid=None) -> GraphArray:
-        arr = np.asarray(arr, dtype=np.float64)
+        arr = np.asarray(arr, dtype=self.dtype)
         return self._create(arr.shape, grid, "value", value=arr)
 
     # -- algebra entry points ---------------------------------------------------
@@ -239,6 +259,13 @@ class ArrayContext:
         d["dispatch_s"] = self.sched_stats.dispatch_s
         d["reshards"] = self.sched_stats.reshards
         d["reshard_moved"] = self.sched_stats.reshard_moved_elements
+        # backend substrate counters: per-op dispatches, compiled-callable
+        # invocations, host/device transfers, and the structural
+        # compile-cache hit/miss/compile-time split (jax/pallas)
+        be = self.executor.backend
+        if be is not None:
+            d.update(be.counters())
+            self.sched_stats.note_backend(be)
         return d
 
     def reset_loads(self) -> None:
@@ -248,4 +275,6 @@ class ArrayContext:
         self.state.transfers.clear()
         self.state.reset_clocks()
         self.executor.stats.reset()
+        if self.executor.backend is not None:
+            self.executor.backend.stats.reset()
         self.sched_stats.reset()

@@ -1,14 +1,19 @@
 """Block executors: the "underlying distributed system" of Fig. 1.
 
-Three backends share one interface:
+Execution is delegated to a ``repro.backend.BlockBackend`` (the compiled
+block-kernel subsystem):
 
-* ``numpy`` — materializes blocks as numpy arrays (correctness oracle).
-* ``sim``   — metadata-only: tracks shapes and dispatch/transfer counts so
+* ``numpy``  — blocks are host numpy arrays, ops run through the per-op
+  interpreter (``graph_array.execute_block_op``) — the bit-exact reference.
+* ``jax``    — blocks stay ``jax.Array``s end-to-end on their placement's
+  device; every op dispatches a structurally-cached ``jax.jit`` executable
+  and ``fused`` chains compile to a single callable.  No host round-trips
+  between ops.
+* ``pallas`` — the jax backend with ``matmul`` routed through the Pallas
+  MXU kernel (``interpret=True`` off-TPU).
+* ``sim``    — metadata-only: tracks shapes and dispatch/transfer counts so
   terabyte-scale graphs can be *scheduled* (load benchmarks) without
-  allocating data.
-* ``jax``   — blocks are jax arrays committed to real devices with
-  ``jax.device_put``; placements map node->device.  Degenerates gracefully to
-  one device; used by the subprocess mesh tests with fake devices.
+  allocating data.  (No backend: there is nothing to execute.)
 
 Two dispatch modes share one interface:
 
@@ -22,15 +27,21 @@ Two dispatch modes share one interface:
   ``cluster.WorkerClocks``).  Because block ops are pure and dependencies are
   respected, drain order never changes values: pipelined results are
   bit-identical to sync results.  ``assemble``/``get`` flush on demand.
+  The drain is event-driven: ready queue heads sit on an eta-keyed heap and
+  blocked heads register a waiter on their first unmet dependency, so each
+  retirement costs O(log Q) instead of rescanning every queue.
 
 The executor also implements task-lineage replay for fault tolerance
 (``fail_node``/``recover``): every op's recipe is recorded so lost blocks can
 be re-executed idempotently — the GraphArray analogue of checkpoint/restart.
-Pending queues are flushed before a failure is injected or a replay starts,
-so lineage always reflects a quiesced system.
+Replay runs on the *same* backend as the original execution (same compiled
+kernels, same dtype), so recovered blocks are bit-identical to the lost
+ones.  Pending queues are flushed before a failure is injected or a replay
+starts, so lineage always reflects a quiesced system.
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from dataclasses import dataclass
 from time import perf_counter
@@ -38,7 +49,9 @@ from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .graph_array import GraphArray, execute_block_op, infer_shape
+from .graph_array import GraphArray, infer_shape
+
+_MODES = ("numpy", "sim", "jax", "pallas")
 
 
 @dataclass
@@ -91,8 +104,9 @@ class Executor:
         seed: int = 0,
         devices: Optional[list] = None,
         pipeline: bool = False,
+        dtype: Optional[str] = None,
     ):
-        if mode not in ("numpy", "sim", "jax"):
+        if mode not in _MODES:
             raise ValueError(f"unknown executor mode {mode!r}")
         self.mode = mode
         self.pipeline = pipeline
@@ -103,17 +117,22 @@ class Executor:
         self.block_home: Dict[int, Tuple[int, int]] = {}
         self.stats = ExecStats()
         self.rng = np.random.default_rng(seed)
-        self._devices = devices
         # pipelined dispatch state: per-(node, worker) FIFO queues plus the
         # set of output ids whose values are still futures
         self.queues: Dict[Tuple[int, int], Deque[PendingOp]] = {}
         self._pending_ids: set = set()
         self._seq = 0
-        if mode == "jax":
-            import jax
+        # optional retire-order capture (set to a list to record out_ids in
+        # the order flush() executes them — the drain-order regression hook)
+        self.retire_log: Optional[List[int]] = None
+        if mode == "sim":
+            self.backend = None
+            self.dtype = dtype or "float64"
+        else:
+            from repro.backend import make_backend
 
-            self._jax = jax
-            self._devices = devices or jax.devices()
+            self.backend = make_backend(mode, dtype=dtype, devices=devices)
+            self.dtype = self.backend.dtype
 
     # -- creation ---------------------------------------------------------
     def create(
@@ -135,6 +154,8 @@ class Executor:
         if self.mode == "sim":
             self.store[vid] = None
             return
+        # block values are generated on the host with numpy for every
+        # backend (identical bits), then committed to backend storage once
         if value is not None:
             arr = np.asarray(value, dtype=np.float64)
         elif kind == "zeros":
@@ -150,10 +171,7 @@ class Executor:
         self.store[vid] = self._commit(arr, placement)
 
     def _commit(self, arr: np.ndarray, placement: Tuple[int, int]):
-        if self.mode == "jax":
-            dev = self._devices[placement[0] % len(self._devices)]
-            return self._jax.device_put(self._jax.numpy.asarray(arr), dev)
-        return arr
+        return self.backend.from_host(arr, placement)
 
     # -- ops ----------------------------------------------------------------
     def resolve(self, vid: int) -> int:
@@ -217,42 +235,79 @@ class Executor:
         in_ids: Sequence[int],
         placement: Tuple[int, int],
     ) -> None:
-        ins = [np.asarray(self.get(i)) for i in in_ids]
-        out = execute_block_op(op, meta, ins)
+        # operands flow to the backend in their resident representation
+        # (numpy arrays / jax device arrays) — no host round-trip here
+        ins = [self.get(i) for i in in_ids]
+        out = self.backend.execute(op, meta, ins, placement)
         out_shape = self.shapes[out_id]
         self.stats.elements_computed += int(np.prod(out_shape)) if out_shape else 1
-        self.store[out_id] = self._commit(out, placement)
+        self.store[out_id] = out
 
     def pending_count(self) -> int:
         return len(self._pending_ids)
+
+    def wait_blocks(self, ga: GraphArray) -> None:
+        """Flush pending dispatches and block until every block value of
+        ``ga`` is materialized and ready — async backends (jax) dispatch
+        eagerly and return futures, so wall-time measurements need this
+        barrier; on numpy it is flush-only."""
+        if self.mode == "sim":
+            return
+        self.flush()
+        for idx in ga.grid.iter_indices():
+            self.backend.wait(self.get(ga.block(idx).vid))
 
     def flush(self) -> int:
         """Drain the dispatch queues: an event loop that repeatedly retires,
         among queue heads whose operands are materialized, the one with the
         earliest simulated finish time.  FIFO order per worker is preserved
         (a worker is a serial resource); the scheduler's topological dispatch
-        order guarantees progress.  Returns the number of ops executed."""
+        order guarantees progress.  Returns the number of ops executed.
+
+        Ready heads sit on a heap keyed (eta, seq) — the same ordering the
+        former every-queue rescan minimized over, so the retire order is
+        identical (regression-tested) at O(log Q) per retirement.  A blocked
+        head registers as a waiter on its first still-pending dependency and
+        is re-examined exactly when that dependency retires; each queue is
+        always in exactly one of {on the heap, waiting, empty}."""
         executed = 0
-        while self._pending_ids:
-            head: Optional[PendingOp] = None
-            for q in self.queues.values():
-                if not q:
-                    continue
-                cand = q[0]
-                if any(self.resolve(i) in self._pending_ids for i in cand.in_ids):
-                    continue
-                if head is None or (cand.eta, cand.seq) < (head.eta, head.seq):
-                    head = cand
-            if head is None:  # pragma: no cover - topological order precludes this
+        if not self._pending_ids:
+            return 0
+        ready: List[Tuple[float, int, Tuple[int, int]]] = []
+        waiting: Dict[int, List[Tuple[int, int]]] = {}
+        pending = self._pending_ids
+
+        def offer(qkey: Tuple[int, int]) -> None:
+            q = self.queues.get(qkey)
+            if not q:
+                return
+            head = q[0]
+            for i in head.in_ids:
+                r = self.resolve(i)
+                if r in pending:
+                    waiting.setdefault(r, []).append(qkey)
+                    return
+            heapq.heappush(ready, (head.eta, head.seq, qkey))
+
+        for qkey in list(self.queues):
+            offer(qkey)
+        while pending:
+            if not ready:  # pragma: no cover - topological order precludes this
                 raise RuntimeError(
-                    f"pipelined executor deadlock: {len(self._pending_ids)} ops "
+                    f"pipelined executor deadlock: {len(pending)} ops "
                     "pending but no queue head is ready"
                 )
-            self.queues[head.placement].popleft()
+            _eta, _seq, qkey = heapq.heappop(ready)
+            head = self.queues[qkey].popleft()
             # retire before executing: _execute->get must not re-enter flush
-            self._pending_ids.discard(head.out_id)
+            pending.discard(head.out_id)
             self._execute(head.out_id, head.op, head.meta, head.in_ids, head.placement)
+            if self.retire_log is not None:
+                self.retire_log.append(head.out_id)
             executed += 1
+            offer(qkey)
+            for waiter in waiting.pop(head.out_id, ()):
+                offer(waiter)
         if executed:
             self.stats.n_flushes += 1
         return executed
@@ -267,12 +322,12 @@ class Executor:
         if self.mode == "sim":
             raise RuntimeError("sim executor holds no data")
         self.flush()
-        out = np.zeros(ga.shape)
         if ga.ndim == 0:
-            return np.asarray(self.get(ga.block(()).vid))
+            return self.backend.to_host(self.get(ga.block(()).vid))
+        out = np.zeros(ga.shape, dtype=ga.grid.dtype)
         for idx in ga.grid.iter_indices():
             v = ga.block(idx)
-            out[ga.grid.block_slices(idx)] = np.asarray(self.get(v.vid))
+            out[ga.grid.block_slices(idx)] = self.backend.to_host(self.get(v.vid))
         return out
 
     # -- fault tolerance: lineage replay ------------------------------------------
@@ -293,8 +348,10 @@ class Executor:
         return lost
 
     def recover(self, vids: Sequence[int]) -> int:
-        """Recompute lost blocks from lineage (topological replay).  Returns
-        the number of re-executed tasks."""
+        """Recompute lost blocks from lineage (topological replay), on the
+        same backend that originally executed them — jax recovery re-runs
+        the cached compiled kernels, so recovered blocks match the lost ones
+        bit-for-bit.  Returns the number of re-executed tasks."""
         self.flush()
         replayed = 0
 
@@ -315,8 +372,8 @@ class Executor:
                 return
             for i in rec.in_ids:
                 ensure(i)
-            ins = [np.asarray(self.get(i)) for i in rec.in_ids]
-            self.store[vid] = self._commit(execute_block_op(rec.op, rec.meta, ins), rec.placement)
+            ins = [self.get(i) for i in rec.in_ids]
+            self.store[vid] = self.backend.execute(rec.op, rec.meta, ins, rec.placement)
             replayed += 1
 
         for vid in vids:

@@ -7,6 +7,12 @@ term of §7) by the chain length without changing placement semantics: a fused
 chain has a single operand, hence a single placement option, exactly like the
 unary vertex it replaces.
 
+Chain semantics live in ``graph_array.apply_chain``: the numpy backend
+interprets the chain step by step, while the jax/pallas backends
+(``repro.backend``) trace the same chain through ``jax.jit`` so a fused
+vertex executes as *one* compiled XLA fusion and one dispatch per block —
+the bench-smoke CI gate asserts the dispatch-count collapse.
+
 Already-``fused`` children (from a previous ``fuse_graph`` pass over a
 shared, not-yet-computed subgraph) are inlined and the walk *continues*
 below them, so a chain interrupted by earlier fusion boundaries still
@@ -70,7 +76,9 @@ def fuse_graph(ga: GraphArray) -> int:
         chain.reverse()  # apply bottom-up
         old_child = v.children[0]
         v.op = "fused"
-        v.meta = {"chain": chain}
+        # a tuple (not list) chain keeps the meta hashable, so both the plan
+        # fingerprint and the backend compile-cache key can memoize it
+        v.meta = {"chain": tuple(chain)}
         v.children = [cur]
         if v in old_child.parents:
             old_child.parents.remove(v)

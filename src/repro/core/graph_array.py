@@ -117,6 +117,25 @@ _BINARY: Dict[str, Callable[[np.ndarray, np.ndarray], np.ndarray]] = {
 }
 
 
+def apply_chain(x, chain: Sequence[Tuple], unary=None, binary=None):
+    """Apply a ``fused`` vertex's op chain to ``x`` bottom-up.
+
+    The one definition of fused-chain semantics: the numpy interpreter calls
+    it with the default tables, and ``repro.backend`` backends pass their own
+    (e.g. jnp) tables so a chain traced under ``jax.jit`` lowers to a single
+    compiled kernel instead of this Python loop.
+    """
+    unary = _UNARY if unary is None else unary
+    binary = _BINARY if binary is None else binary
+    for step in chain:
+        if step[0] == "unary":
+            x = unary[step[1]](x)
+        else:  # ("scalar", op, scalar, reverse)
+            fn = binary[step[1]]
+            x = fn(step[2], x) if step[3] else fn(x, step[2])
+    return x
+
+
 def execute_block_op(op: str, meta: Dict[str, Any], inputs: Sequence[np.ndarray]) -> np.ndarray:
     """Reference/numpy execution of one block-level op."""
     if op in _UNARY:
@@ -155,14 +174,7 @@ def execute_block_op(op: str, meta: Dict[str, Any], inputs: Sequence[np.ndarray]
         return np.einsum(meta["spec"], *inputs)
     if op == "fused":
         # beyond-paper operator fusion: a chain of unary/scalar block ops
-        x = inputs[0]
-        for step in meta["chain"]:
-            if step[0] == "unary":
-                x = _UNARY[step[1]](x)
-            else:  # ("scalar", op, scalar, reverse)
-                fn = _BINARY[step[1]]
-                x = fn(step[2], x) if step[3] else fn(x, step[2])
-        return x
+        return apply_chain(inputs[0], meta["chain"])
     if op == "qr_r":  # linalg substrate: R factor of a thin QR
         return np.linalg.qr(inputs[0], mode="r")
     if op == "qr_q":
@@ -177,7 +189,7 @@ def execute_block_op(op: str, meta: Dict[str, Any], inputs: Sequence[np.ndarray]
         return inputs[0][tuple(
             slice(a, b) for a, b in zip(meta["starts"], meta["stops"]))]
     if op == "concat_blocks":  # paste n pieces into one block at offsets
-        out = np.zeros(meta["shape"])
+        out = np.zeros(meta["shape"], dtype=inputs[0].dtype)
         for off, piece in zip(meta["offsets"], inputs):
             out[tuple(slice(o, o + s) for o, s in zip(off, piece.shape))] = piece
         return out
@@ -527,6 +539,13 @@ class GraphArray:
     def to_numpy(self) -> np.ndarray:
         self.ctx.compute(self)
         return self.ctx.executor.assemble(self)
+
+    def wait(self) -> "GraphArray":
+        """Barrier: flush pending dispatches and block until every block's
+        backend value is ready (async backends return futures; timing code
+        must call this before stopping the clock)."""
+        self.ctx.executor.wait_blocks(self)
+        return self
 
     def placements(self) -> Dict[Index, Tuple[int, int]]:
         return {idx: self.block(idx).placement for idx in self.grid.iter_indices()}

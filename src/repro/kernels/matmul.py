@@ -18,13 +18,13 @@ from jax.experimental.pallas import tpu as pltpu
 from .ops import CompilerParams
 
 
-def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int, acc_dtype):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(
-        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        a_ref[...], b_ref[...], preferred_element_type=acc_dtype
     )
 
     @pl.when(pl.program_id(2) == k_steps - 1)
@@ -51,8 +51,12 @@ def matmul_pallas(
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
     k_steps = K // bk
     out_dtype = out_dtype or a.dtype
+    # accumulator dtype: f32 matches the MXU's native accumulation; f64
+    # inputs (CPU interpret runs, backend parity tests under x64) accumulate
+    # in f64 so the kernel is bit-comparable to a float64 reference matmul
+    acc_dtype = jnp.float64 if jnp.dtype(a.dtype) == jnp.float64 else jnp.float32
     return pl.pallas_call(
-        functools.partial(_matmul_kernel, k_steps=k_steps),
+        functools.partial(_matmul_kernel, k_steps=k_steps, acc_dtype=acc_dtype),
         grid=(M // bm, N // bn, k_steps),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
@@ -60,7 +64,7 @@ def matmul_pallas(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),

@@ -36,6 +36,19 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
     return jnp.pad(x, widths, constant_values=value)
 
 
+def _tile(dim: int, req: int, g: int) -> int:
+    """Largest tile <= ``req`` that divides ``dim`` and is a multiple of the
+    ``g``-lane granularity (``dim`` must already be padded to a multiple of
+    ``g``, so the search always terminates at ``g``).  Padding only to the
+    granularity and then clamping the tile to the dim — the old scheme —
+    broke whenever the padded dim was between one and two requested tiles
+    (e.g. 640 with bk=512: 640 % 512 != 0)."""
+    t = max(min(req, dim) - min(req, dim) % g, g)
+    while dim % t:
+        t -= g
+    return t
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def matmul(a, b, *, bm: int = 512, bn: int = 1024, bk: int = 512,
            interpret: Optional[bool] = None):
@@ -44,10 +57,16 @@ def matmul(a, b, *, bm: int = 512, bn: int = 1024, bk: int = 512,
     interpret = (not _on_tpu()) if interpret is None else interpret
     M, K = a.shape
     _, N = b.shape
-    ap = _pad_to(_pad_to(a, 0, min(bm, 128)), 1, min(bk, 128))
-    bp = _pad_to(_pad_to(b, 0, min(bk, 128)), 1, min(bn, 128))
-    out = matmul_pallas(ap, bp, bm=min(bm, ap.shape[0]), bn=min(bn, bp.shape[1]),
-                        bk=min(bk, ap.shape[1]), interpret=interpret)
+    gm, gn, gk = min(bm, 128), min(bn, 128), min(bk, 128)
+    ap = _pad_to(_pad_to(a, 0, gm), 1, gk)
+    bp = _pad_to(_pad_to(b, 0, gk), 1, gn)
+    out = matmul_pallas(
+        ap, bp,
+        bm=_tile(ap.shape[0], bm, gm),
+        bn=_tile(bp.shape[1], bn, gn),
+        bk=_tile(ap.shape[1], bk, gk),
+        interpret=interpret,
+    )
     return out[:M, :N]
 
 

@@ -65,7 +65,16 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--scheduler", default="lshs",
                     choices=("lshs", "lshs+", "roundrobin", "dynamic"))
-    ap.add_argument("--backend", default="sim", choices=("sim", "numpy"))
+    ap.add_argument("--backend", default="sim",
+                    choices=("sim", "numpy", "jax", "pallas"),
+                    help="block-kernel execution backend (repro.backend): "
+                         "sim = metadata only, numpy = reference interpreter, "
+                         "jax = compiled jax.jit kernels on device, pallas = "
+                         "jax + Pallas matmul kernels")
+    ap.add_argument("--dtype", default=None,
+                    choices=("float32", "float64"),
+                    help="block dtype (default: the backend's natural dtype "
+                         "— float64 for numpy, float32 for jax/pallas)")
     ap.add_argument("--scale", type=int, default=2, help="log2 size multiplier")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--iters", type=int, default=1,
@@ -88,7 +97,8 @@ def main() -> None:
                        help="dispatch every op eagerly (seed behavior)")
     ap.set_defaults(pipeline=True)
     ap.add_argument("--fail-node", type=int, default=None,
-                    help="inject a node failure mid-run, then recover (numpy)")
+                    help="inject a node failure mid-run, then recover from "
+                         "lineage (any data-holding backend: numpy/jax/pallas)")
     args = ap.parse_args()
 
     ctx = ArrayContext(
@@ -96,6 +106,7 @@ def main() -> None:
         node_grid=(args.nodes, 1),
         scheduler=args.scheduler,
         backend=args.backend,
+        dtype=args.dtype,
         seed=args.seed,
         pipeline=args.pipeline,
         plan_cache=args.plan_cache,
@@ -105,8 +116,9 @@ def main() -> None:
                          reshard_method=args.reshard_method)
 
     if args.fail_node is not None:
-        if args.backend != "numpy":
-            raise SystemExit("--fail-node needs --backend numpy (data to lose)")
+        if args.backend == "sim":
+            raise SystemExit("--fail-node needs a data-holding backend "
+                             "(numpy/jax/pallas: there must be data to lose)")
         pending = ctx.executor.pending_count()
         lost = ctx.executor.fail_node(args.fail_node)
         replayed = ctx.executor.recover(
@@ -120,7 +132,7 @@ def main() -> None:
         workload=args.workload, scheduler=args.scheduler,
         pipeline=args.pipeline, nodes=args.nodes, workers=args.workers,
         n_queued=ctx.executor.stats.n_queued, iters=args.iters,
-        plan_cache=args.plan_cache,
+        plan_cache=args.plan_cache, backend=args.backend, dtype=ctx.dtype,
     )
     report.update(ctx.sched_stats.as_dict())
     print(json.dumps(report, indent=2, default=float))

@@ -210,10 +210,13 @@ def attention_block(
     new_cache = None
     if cache is not None and not cross:
         pos = cache["pos"]
+        # literal 0 indices must match pos's integer width (under x64 mode a
+        # bare 0 lands as int64 while cached positions stay int32)
+        zero = jnp.zeros_like(pos)
         ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, pos, 0, 0))
+                                          (zero, pos, zero, zero))
         cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, pos, 0, 0))
+                                          (zero, pos, zero, zero))
         new_cache = {"k": ck, "v": cv, "pos": pos + S}
         k, v = ck, cv
     out = attention_scores(q, k, v, mask, cfg.logit_softcap)

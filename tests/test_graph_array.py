@@ -294,8 +294,8 @@ class TestNewUnaryOpsAndFusion:
         assert eliminated == 2  # fused vertex AND the sqrt below it
         assert top.op == "fused"
         assert top.children == [base]          # chain fully collapsed
-        assert top.meta["chain"] == [("unary", "sqrt"), ("unary", "neg"),
-                                     ("unary", "sigmoid")]
+        assert tuple(top.meta["chain"]) == (("unary", "sqrt"), ("unary", "neg"),
+                                            ("unary", "sigmoid"))
         # absorbed vertices are detached: nothing can resurrect them
         assert all(p is top for p in base.parents)
         x = np.abs(np.random.default_rng(0).standard_normal((8, 8))) + 1.0
