@@ -1,0 +1,95 @@
+"""Chaos-runtime benchmark: fault-free vs degraded makespans under injected
+faults (the robustness story behind DESIGN.md §7 / ROADMAP "Elastic
+autoscaling + straggler scenarios under load").
+
+``chaos_smoke()`` is the CI bench-smoke section: the logreg-Newton scenario
+(``repro.launch.chaos``) fault-free vs 1 dead node + 2 stragglers (4x), with
+the bit-identity, determinism, and makespan-ratio numbers the workflow gate
+asserts on (degraded ≤ 1.5x fault-free).  All numbers are deterministic
+simulated-clock quantities — no wall-timer noise in the gate.
+
+``run()`` emits CSV rows sweeping slowdown and speculation on/off, and
+``write_trajectory()`` appends the smoke report to ``BENCH_chaos.json`` at
+the repo root — the per-PR trajectory of the degradation ratio.
+
+    PYTHONPATH=src python -m benchmarks.run --only chaos
+    PYTHONPATH=src python -m benchmarks.bench_chaos   # writes BENCH_chaos.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+
+from repro.launch.chaos import run_chaos_scenario
+
+from .common import emit
+
+TRAJECTORY = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_chaos.json")
+
+
+def chaos_smoke() -> dict:
+    """Small deterministic chaos comparison for the bench-smoke artifact:
+    fault-free vs 1 dead node + 2 stragglers (4x) + transient faults on the
+    8-node pipelined logreg-Newton scenario."""
+    return run_chaos_scenario(
+        nodes=8, workers=2, backend="numpy", iters=3, d=32,
+        fail_nodes=1, stragglers=2, slowdown=4.0, fault_prob=0.02,
+    )
+
+
+def run(quick: bool = True) -> None:
+    base = chaos_smoke()
+    emit("chaos.logreg.faultfree_makespan_us",
+         base["makespan_faultfree"] * 1e6,
+         f"identical={base['identical']} deterministic={base['deterministic']}")
+    emit("chaos.logreg.degraded_makespan_us",
+         base["makespan_chaos"] * 1e6,
+         f"ratio={base['makespan_ratio']:.3f} "
+         f"retries={base['chaos_retries']} "
+         f"replayed={base['chaos_blocks_replayed']} "
+         f"spec_wins={base['chaos_spec_wins']}")
+    slowdowns = (2.0, 4.0) if quick else (2.0, 4.0, 8.0, 16.0)
+    for s in slowdowns:
+        for spec in (True, False):
+            r = run_chaos_scenario(
+                nodes=8, workers=2, iters=3, fail_nodes=0, stragglers=2,
+                slowdown=s, fault_prob=0.0, speculation=spec,
+                check_determinism=False)
+            emit(f"chaos.straggler.slow{s:g}.spec_{'on' if spec else 'off'}",
+                 r["makespan_chaos"] * 1e6,
+                 f"ratio={r['makespan_ratio']:.3f} "
+                 f"spec={r['chaos_speculated']} wins={r['chaos_spec_wins']}")
+
+
+def write_trajectory(report: dict, path: str = TRAJECTORY) -> None:
+    """Append this run's smoke report to the BENCH_chaos.json trajectory
+    (a list of per-commit entries keyed by git SHA)."""
+    entries = []
+    if os.path.exists(path):
+        with open(path) as f:
+            entries = json.load(f)
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, cwd=os.path.dirname(path)).stdout.strip() or "unknown"
+    except OSError:
+        sha = "unknown"
+    keep = ("makespan_faultfree", "makespan_chaos", "makespan_ratio",
+            "identical", "deterministic", "chaos_transient_faults",
+            "chaos_retries", "chaos_escalations", "chaos_speculated",
+            "chaos_spec_wins", "chaos_spec_cancelled", "chaos_nodes_failed",
+            "chaos_blocks_lost", "chaos_blocks_replayed",
+            "chaos_rerouted_ops", "nodes", "iters")
+    entries.append({"commit": sha, **{k: report[k] for k in keep}})
+    with open(path, "w") as f:
+        json.dump(entries, f, indent=2, default=float)
+        f.write("\n")
+    print(f"# wrote {path} ({len(entries)} entries)", flush=True)
+
+
+if __name__ == "__main__":
+    report = chaos_smoke()
+    print(json.dumps(report, indent=2, default=float))
+    write_trajectory(report)

@@ -198,6 +198,8 @@ def smoke() -> dict:
         quick=True, emit_rows=False)
     result["reshard"] = bench_tensor.reshard_smoke()
     result["backend"] = backend_section()
+    from . import bench_chaos
+    result["chaos"] = bench_chaos.chaos_smoke()
     return result
 
 

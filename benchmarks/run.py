@@ -21,6 +21,7 @@ import time
 
 from . import (
     bench_bounds,
+    bench_chaos,
     bench_serving,
     bench_datasci,
     bench_dgemm,
@@ -45,6 +46,7 @@ SUITES = {
     "bounds": bench_bounds,      # Appendix A
     "serving": bench_serving,    # beyond-paper: continuous batching
     "roofline": bench_roofline,  # §Roofline (reads dry-run artifact)
+    "chaos": bench_chaos,        # beyond-paper: fault-injection robustness
 }
 
 
@@ -104,6 +106,13 @@ def main() -> None:
               f"compile_hit_rate={be['jax']['compile_hit_rate']:.3f} "
               f"fused_dispatches={fc['fused_dispatches']} "
               f"interp_dispatches={fc['interp_dispatches']}", flush=True)
+        ch = smoke["chaos"]
+        print(f"# smoke chaos ratio={ch['makespan_ratio']:.3f} "
+              f"identical={ch['identical']} "
+              f"deterministic={ch['deterministic']} "
+              f"retries={ch['chaos_retries']} "
+              f"replayed={ch['chaos_blocks_replayed']} "
+              f"spec_wins={ch['chaos_spec_wins']}", flush=True)
         if args.json:
             _write_json(args.json, {**meta, "smoke_result": smoke})
         print(f"# total {time.time() - t0:.1f}s", flush=True)

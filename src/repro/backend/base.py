@@ -43,6 +43,7 @@ class BackendStats:
     d2h: int = 0            # device -> host gathers (to_host)
     device_moves: int = 0   # device -> device operand moves
     fallbacks: int = 0      # ops executed via the numpy fallback path
+    replays: int = 0        # lineage-replay re-executions (fault recovery)
 
     def reset(self) -> None:
         self.dispatches = 0
@@ -51,6 +52,7 @@ class BackendStats:
         self.d2h = 0
         self.device_moves = 0
         self.fallbacks = 0
+        self.replays = 0
 
     def as_dict(self) -> Dict[str, int]:
         return {
@@ -60,6 +62,7 @@ class BackendStats:
             "backend_d2h": self.d2h,
             "backend_device_moves": self.device_moves,
             "backend_fallbacks": self.fallbacks,
+            "backend_replays": self.replays,
         }
 
 

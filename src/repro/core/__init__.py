@@ -6,6 +6,7 @@ Public API:
     LSHS / RoundRobinScheduler / DynamicScheduler, ClusterState, CostModel,
     bounds (α-β-γ communication model, Appendix A).
 """
+from .chaos import ChaosEngine, ChaosPlan, ChaosStats, RetryPolicy
 from .cluster import ClusterState, CostModel, WorkerClocks, MEM, NET_IN, NET_OUT
 from .context import ArrayContext
 from .executor import Executor
@@ -29,6 +30,10 @@ from . import bounds
 __all__ = [
     "ArrayContext",
     "ArrayGrid",
+    "ChaosEngine",
+    "ChaosPlan",
+    "ChaosStats",
+    "RetryPolicy",
     "ClusterSpec",
     "ClusterState",
     "CostModel",

@@ -40,6 +40,19 @@ class CommModel:
     def R(self, n: float) -> float:
         return self.alpha_r + self.beta_r * n * self.bytes_per_element
 
+    def degraded(self, link_factor: float) -> "CommModel":
+        """Chaos-runtime link degradation: a copy of this model with every
+        network channel's inverse bandwidth scaled by ``link_factor`` (>= 1
+        slows links; latencies and the γ dispatch cost are unchanged)."""
+        if link_factor < 1.0:
+            raise ValueError("link_factor must be >= 1 (1.0 = healthy links)")
+        return CommModel(
+            alpha=self.alpha, beta=self.beta * link_factor,
+            alpha_d=self.alpha_d, beta_d=self.beta_d * link_factor,
+            alpha_r=self.alpha_r, beta_r=self.beta_r * link_factor,
+            gamma=self.gamma, bytes_per_element=self.bytes_per_element,
+        )
+
 
 TPU_COMM = CommModel(
     alpha=1e-6, beta=1.0 / 50e9,      # ICI per link

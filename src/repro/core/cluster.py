@@ -106,6 +106,20 @@ class WorkerClocks:
         self.net_in = np.zeros(k)
         self.net_out = np.zeros(k)
         self.ready: Dict[int, float] = {}  # obj -> simulated availability time
+        # chaos factors (core.chaos): per-node compute slowdown (stragglers)
+        # and a global transfer-time multiplier (link degradation).  The
+        # defaults are exact identities, so nominal tracks are unaffected.
+        self.node_slowdown = np.ones(k)
+        self.link_factor = 1.0
+
+    def set_chaos(self, node_slowdown, link_factor: float = 1.0) -> None:
+        """Install chaos factors: ``node_slowdown[j]`` (>= 1) multiplies
+        compute time on node ``j``; ``link_factor`` (>= 1) multiplies every
+        transfer time (bandwidth degradation).  Only chaos-engine clock
+        tracks ever set these; scheduler-facing tracks stay nominal so
+        placement decisions — and output bits — are chaos-independent."""
+        self.node_slowdown = np.asarray(node_slowdown, dtype=np.float64)
+        self.link_factor = float(link_factor)
 
     def clone(self) -> "WorkerClocks":
         c = WorkerClocks(self.k, self.workers_per_node, self.cost_model, self.overlap)
@@ -113,6 +127,8 @@ class WorkerClocks:
         c.net_in = self.net_in.copy()
         c.net_out = self.net_out.copy()
         c.ready = dict(self.ready)
+        c.node_slowdown = self.node_slowdown.copy()
+        c.link_factor = self.link_factor
         return c
 
     def reset(self) -> None:
@@ -150,14 +166,14 @@ class WorkerClocks:
             t0 = max(self.ready.get(obj, 0.0), self.net_out[src], self.net_in[node])
             if not self.overlap:
                 t0 = max(t0, self.busy[node, worker])
-            t1 = t0 + cm.transfer_seconds(elements)
+            t1 = t0 + cm.transfer_seconds(elements) * self.link_factor
             self.net_out[src] = t1
             self.net_in[node] = t1
             if not self.overlap:
                 self.busy[node, worker] = t1
             t_xfer = max(t_xfer, t1)
         start = max(self.busy[node, worker], t_ready, t_xfer)
-        end = start + cm.compute_seconds(work_elements)
+        end = start + cm.compute_seconds(work_elements) * self.node_slowdown[node]
         self.busy[node, worker] = end
         self.ready[out_obj] = end
         return start, end
@@ -187,14 +203,14 @@ class WorkerClocks:
                      net_in)
             if not self.overlap:
                 t0 = max(t0, w_busy)
-            t1 = t0 + cm.transfer_seconds(elements)
+            t1 = t0 + cm.transfer_seconds(elements) * self.link_factor
             net_out[src] = t1
             net_in = t1
             if not self.overlap:
                 w_busy = t1
             t_xfer = max(t_xfer, t1)
         start = max(w_busy, t_ready, t_xfer)
-        return start + cm.compute_seconds(work_elements)
+        return start + cm.compute_seconds(work_elements) * self.node_slowdown[node]
 
     def makespan(self) -> float:
         return float(self.busy.max()) if self.busy.size else 0.0
@@ -244,6 +260,12 @@ class ClusterState:
         w = cluster.workers_per_node
         self.clocks_sync = WorkerClocks(self.k, w, self.cost_model, overlap=False)
         self.clocks_pipe = WorkerClocks(self.k, w, self.cost_model, overlap=True)
+        # observer called after every transition with
+        # (node, out_obj, out_elements, inputs, worker, (start, end)) — the
+        # chaos engine registers here to track planned ops without ever
+        # influencing scheduling (clones never fire it: what-if simulations
+        # are not real transitions)
+        self.transition_hook = None
 
     # -- bookkeeping -------------------------------------------------------
     def clone(self) -> "ClusterState":
@@ -261,6 +283,7 @@ class ClusterState:
         c._worker_rr = list(self._worker_rr)
         c.clocks_sync = self.clocks_sync.clone()
         c.clocks_pipe = self.clocks_pipe.clone()
+        c.transition_hook = None
         return c
 
     def add_object(
@@ -349,7 +372,10 @@ class ClusterState:
         in_objs = [(obj, self.obj_size[obj]) for obj in inputs]
         work = out_elements + sum(e for _o, e in in_objs)
         self.clocks_sync.place(node, worker, out_obj, work, in_objs, xfers)
-        return self.clocks_pipe.place(node, worker, out_obj, work, in_objs, xfers)
+        eta = self.clocks_pipe.place(node, worker, out_obj, work, in_objs, xfers)
+        if self.transition_hook is not None:
+            self.transition_hook(node, out_obj, out_elements, inputs, worker, eta)
+        return eta
 
     def simulate_cost(
         self,

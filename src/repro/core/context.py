@@ -89,6 +89,8 @@ class ArrayContext:
         self._seed = seed
         self._create_counter = 0
         self.fuse_enabled = fuse
+        # chaos runtime (core.chaos): ``enable_chaos`` attaches an engine
+        self.chaos_engine = None
         # auto layout (§4 heuristic, per-array): creations and scheduled
         # outputs get a node grid factored to match their own block grid
         # (``default_node_grid``) instead of the context-wide ``node_grid``;
@@ -240,6 +242,18 @@ class ArrayContext:
             v.meta["dest"] = node
             stack.extend(v.children)
 
+    # -- chaos runtime ----------------------------------------------------------
+    def enable_chaos(self, plan, seed: int = 0, retry=None):
+        """Attach a seeded fault-injection engine (``core.chaos``) to this
+        context's executor: stragglers, link degradation, transient-fault
+        retry/backoff, node death + lineage replay, and live speculative
+        re-execution.  Scheduling is untouched, so outputs stay bit-identical
+        to the fault-free run; same (seed, plan) ⇒ same chaos schedule.
+        Returns the attached ``ChaosEngine``."""
+        from .chaos import ChaosEngine
+
+        return ChaosEngine(plan, seed=seed, retry=retry).attach(self)
+
     # -- pipelined dispatch -----------------------------------------------------
     def flush(self) -> int:
         """Drain any pending pipelined ops (no-op for the sync executor).
@@ -266,6 +280,8 @@ class ArrayContext:
         if be is not None:
             d.update(be.counters())
             self.sched_stats.note_backend(be)
+        if self.chaos_engine is not None:
+            d.update(self.chaos_engine.summary())
         return d
 
     def reset_loads(self) -> None:

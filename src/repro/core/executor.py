@@ -75,6 +75,8 @@ class PendingOp:
     placement: Tuple[int, int]
     eta: float  # simulated finish time (event-loop drain priority)
     seq: int    # dispatch order (deterministic tie-break)
+    faults: int = 0          # chaos: seeded failed attempts to retry through
+    spec_checked: bool = False  # chaos: speculation evaluated once per op
 
 
 @dataclass
@@ -125,6 +127,10 @@ class Executor:
         # optional retire-order capture (set to a list to record out_ids in
         # the order flush() executes them — the drain-order regression hook)
         self.retire_log: Optional[List[int]] = None
+        # chaos runtime (core.chaos.ChaosEngine.attach installs itself here):
+        # when set, dispatch draws seeded transient faults and flush() drains
+        # through the fault-injecting event loop instead of the fast path
+        self.chaos = None
         if mode == "sim":
             self.backend = None
             self.dtype = dtype or "float64"
@@ -211,10 +217,14 @@ class Executor:
             self.store[out_id] = None
             self.stats.dispatch_s += perf_counter() - t0
             return
+        # chaos: transient-fault attempts are drawn at dispatch time, so the
+        # seeded sequence is a function of the schedule alone — drain order,
+        # speculation and replay never shift which op draws which faults
+        faults = self.chaos.draw_faults() if self.chaos is not None else 0
         if self.pipeline:
             pending = PendingOp(
                 out_id, op, dict(meta), tuple(in_ids), placement,
-                eta=eta[1] if eta else 0.0, seq=self._seq,
+                eta=eta[1] if eta else 0.0, seq=self._seq, faults=faults,
             )
             self._seq += 1
             self.queues.setdefault(placement, deque()).append(pending)
@@ -225,6 +235,13 @@ class Executor:
             return
         # sync mode: dispatch accounting stops before the block math itself
         self.stats.dispatch_s += perf_counter() - t0
+        if self.chaos is not None:
+            head = PendingOp(out_id, op, dict(meta), tuple(in_ids), placement,
+                             eta=eta[1] if eta else 0.0, seq=self._seq,
+                             faults=faults)
+            self._seq += 1
+            self._execute_chaos(head)
+            return
         self._execute(out_id, op, meta, in_ids, placement)
 
     def _execute(
@@ -273,6 +290,8 @@ class Executor:
         executed = 0
         if not self._pending_ids:
             return 0
+        if self.chaos is not None:
+            return self._flush_chaos()
         ready: List[Tuple[float, int, Tuple[int, int]]] = []
         waiting: Dict[int, List[Tuple[int, int]]] = {}
         pending = self._pending_ids
@@ -312,6 +331,123 @@ class Executor:
             self.stats.n_flushes += 1
         return executed
 
+    # -- chaos dispatch (core.chaos) -----------------------------------------
+    def _execute_chaos(self, head: PendingOp,
+                       placement: Optional[Tuple[int, int]] = None) -> None:
+        """Execute one op through the chaos engine: re-route off dead nodes,
+        escalate exhausted transient-fault budgets to the best survivor,
+        charge the chaos clocks (backoff + straggler-slowed compute +
+        degraded transfers), then run the pure block op."""
+        eng = self.chaos
+        node, worker = placement if placement is not None else head.placement
+        if node in eng.dead:
+            node, worker = eng.pick_node(head, exclude=eng.dead)
+            eng.stats.rerouted_ops += 1
+        if head.faults > eng.retry.max_retries:
+            # per-op retry budget exhausted on this node: the final attempt
+            # migrates to the best surviving node (timeout escalation)
+            node, worker = eng.pick_node(head, exclude=eng.dead | {node})
+            eng.stats.escalations += 1
+        eng.charge(head, node, worker)
+        self._execute(head.out_id, head.op, head.meta, head.in_ids,
+                      (node, worker))
+
+    def _kill_and_replay(self, node: int) -> None:
+        """A node died mid-drain: drop its blocks (object-store loss), then
+        eagerly replay every lost block from lineage on surviving nodes —
+        queued ops depending on them must find operands materialized when
+        they retire.  Replay placement and clock charges go through the
+        chaos engine."""
+        lost = self.chaos.kill_node(node)
+        if lost:
+            self.recover(lost, _flush=False)
+
+    def _flush_chaos(self) -> int:
+        """Chaos-mode drain: like ``flush`` but every retirement passes
+        through the ChaosEngine.  Per event-loop step: (1) collect ready
+        queue heads; (2) re-route heads stranded on dead nodes; (3) project
+        each head's finish on the chaos clocks and offer projected
+        stragglers (> threshold × median) a speculative duplicate on the
+        best survivor — the projected first finisher wins and the loser is
+        cancelled before charging anything; (4) retire the earliest
+        projected finisher, triggering a planned node failure first if that
+        op would start at or after the node's failure time.  Retire order
+        follows *chaos-projected* finishes (nominal etas no longer reflect
+        reality), which is safe for any dependency-respecting order: block
+        ops are pure, so values — and output bits — are unchanged."""
+        eng = self.chaos
+        pending = self._pending_ids
+        executed = 0
+        while pending:
+            heads: List[Tuple[Tuple[int, int], PendingOp]] = []
+            for qkey in sorted(self.queues):
+                q = self.queues[qkey]
+                if not q:
+                    continue
+                head = q[0]
+                if any(self.resolve(i) in pending for i in head.in_ids):
+                    continue
+                heads.append((qkey, head))
+            if not heads:  # pragma: no cover - topological order precludes this
+                raise RuntimeError(
+                    f"chaos drain deadlock: {len(pending)} ops pending but "
+                    "no queue head is ready")
+            for _qkey, head in heads:
+                tgt = eng.spec_target.get(head.out_id) or head.placement
+                if tgt[0] in eng.dead:
+                    eng.spec_target[head.out_id] = eng.pick_node(
+                        head, exclude=eng.dead)
+                    eng.stats.rerouted_ops += 1
+            projs = [
+                eng.project(h, placement=eng.spec_target.get(h.out_id)
+                            or h.placement)
+                for _q, h in heads
+            ]
+            if eng.plan.speculation and len(heads) > 1:
+                thresh = eng.plan.spec_threshold * max(
+                    float(np.median(projs)), 1e-12)
+                for i, (_qkey, head) in enumerate(heads):
+                    if head.spec_checked or projs[i] <= thresh:
+                        continue
+                    head.spec_checked = True
+                    cur = eng.spec_target.get(head.out_id) or head.placement
+                    dup = eng.pick_node(head, exclude=eng.dead | {cur[0]})
+                    dup_proj = eng.project(head, placement=dup)
+                    eng.stats.speculated += 1
+                    if dup_proj < projs[i]:
+                        # the duplicate is projected to finish first: it
+                        # wins; the slow original is cancelled (its node is
+                        # never charged — loads reconciled)
+                        eng.spec_target[head.out_id] = dup
+                        eng.stats.spec_wins += 1
+                        projs[i] = dup_proj
+                    else:
+                        # original wins the race; duplicate cancelled
+                        eng.stats.spec_cancelled += 1
+            i = min(range(len(heads)), key=lambda j: (projs[j], heads[j][1].seq))
+            qkey, head = heads[i]
+            tgt = eng.spec_target.get(head.out_id) or head.placement
+            if eng.pending_failure(tgt[0], eng.projected_start(head,
+                                                               placement=tgt)):
+                self._kill_and_replay(tgt[0])
+                continue  # re-scan: residency and queues changed
+            self.queues[qkey].popleft()
+            pending.discard(head.out_id)
+            self._execute_chaos(head, placement=eng.spec_target.pop(
+                head.out_id, None))
+            if self.retire_log is not None:
+                self.retire_log.append(head.out_id)
+            executed += 1
+        # end-of-drain sweep: a failure timed inside this drain's makespan
+        # fires even if no op ever started on the node after t
+        for node, t in eng._fail_at.items():
+            if (node not in eng.dead and node < eng.clocks.k
+                    and t <= eng.clocks.makespan()):
+                self._kill_and_replay(node)
+        if executed:
+            self.stats.n_flushes += 1
+        return executed
+
     def alias(self, new_id: int, old_id: int) -> None:
         self.aliases[new_id] = old_id
         self.shapes[new_id] = self.shapes[self.resolve(old_id)]
@@ -331,28 +467,46 @@ class Executor:
         return out
 
     # -- fault tolerance: lineage replay ------------------------------------------
-    def fail_node(self, node: int) -> List[int]:
-        """Drop every block whose home is ``node`` (simulated node failure).
-        Pending queues are flushed first: in-flight futures either complete
-        before the failure or are lost with the node and replayed from
-        lineage — flushing picks the former, keeping replay bookkeeping
-        exact."""
-        self.flush()
+    def _drop_node_blocks(self, node: int, home_fn=None) -> List[int]:
+        """Drop every materialized block homed on ``node`` and return the
+        lost ids.  ``home_fn`` overrides the home lookup — the chaos engine
+        passes its actual-home view, which tracks blocks that speculation,
+        re-routing or replay moved off their planned placement."""
+        if home_fn is None:
+            home_fn = self.block_home.__getitem__
         lost = [
             vid
-            for vid, (n, _w) in self.block_home.items()
-            if n == node and vid not in self.aliases and self.store.get(vid) is not None
+            for vid in self.block_home
+            if vid not in self.aliases and self.store.get(vid) is not None
+            and home_fn(vid)[0] == node
         ]
         for vid in lost:
             self.store[vid] = None
         return lost
 
-    def recover(self, vids: Sequence[int]) -> int:
+    def fail_node(self, node: int) -> List[int]:
+        """Drop every block whose home is ``node`` (simulated node failure).
+        Pending queues are flushed first: in-flight futures either complete
+        before the failure or are lost with the node and replayed from
+        lineage — flushing picks the former, keeping replay bookkeeping
+        exact.  (The chaos runtime instead kills nodes *mid*-drain:
+        ``core.chaos`` + ``_flush_chaos``.)"""
+        self.flush()
+        return self._drop_node_blocks(node)
+
+    def recover(self, vids: Sequence[int], _flush: bool = True) -> int:
         """Recompute lost blocks from lineage (topological replay), on the
         same backend that originally executed them — jax recovery re-runs
         the cached compiled kernels, so recovered blocks match the lost ones
-        bit-for-bit.  Returns the number of re-executed tasks."""
-        self.flush()
+        bit-for-bit.  Returns the number of re-executed tasks.
+
+        With a chaos engine attached, replays whose recorded placement died
+        re-home to the best surviving node (LSHS-cost-scored) and charge the
+        chaos clocks; ``_flush=False`` is the engine's re-entrant path for
+        deaths injected while the drain itself is running."""
+        if _flush:
+            self.flush()
+        eng = self.chaos
         replayed = 0
 
         def ensure(vid: int) -> None:
@@ -361,20 +515,28 @@ class Executor:
             if self.store.get(vid) is not None:
                 return
             rec = self.lineage[vid]
+            placement = rec.placement if eng is None else eng.replay_placement(rec)
             if rec.op.startswith("create:"):
                 kind = rec.op.split(":", 1)[1]
                 self.store.pop(vid, None)
                 self.create(
-                    vid, self.shapes[vid], rec.placement, kind,
+                    vid, self.shapes[vid], placement, kind,
                     value=rec.meta.get("value"), seed=rec.meta.get("seed"),
                 )
-                replayed += 1
-                return
-            for i in rec.in_ids:
-                ensure(i)
-            ins = [self.get(i) for i in rec.in_ids]
-            self.store[vid] = self.backend.execute(rec.op, rec.meta, ins, rec.placement)
+            else:
+                for i in rec.in_ids:
+                    ensure(i)
+                # operands come straight from the store: ensure() has just
+                # materialized them, and get() must not re-enter flush when
+                # the chaos drain replays mid-flush
+                ins = [self.store[self.resolve(i)] for i in rec.in_ids]
+                self.store[vid] = self.backend.execute(rec.op, rec.meta, ins,
+                                                       placement)
             replayed += 1
+            if self.backend is not None:
+                self.backend.stats.replays += 1
+            if eng is not None:
+                eng.note_replayed(vid, placement, rec)
 
         for vid in vids:
             ensure(vid)

@@ -317,6 +317,32 @@ class DynamicScheduler(SchedulerBase):
         return v.children[0], v.children[1]
 
 
+def chaos_placement(state: ClusterState, engine, op,
+                    candidates: Sequence[int]) -> int:
+    """Runtime re-placement under chaos (speculative duplicates, dead-node
+    re-routing, escalated retries, lineage replays): candidate nodes are
+    scored with the *same* vectorized LSHS cost pass cold scheduling uses
+    (``ClusterState.simulate_cost_batch`` — Eq. 2 objective, then moved
+    bytes), with the chaos clocks' projected finish as the leading key so a
+    straggling or congested survivor loses to an equally-cheap healthy one.
+    Speculation options thereby flow through the LSHS cost simulation rather
+    than a separate heuristic.  Deterministic: ties fall to the lowest node
+    id, and every input is simulated state."""
+    if len(candidates) == 1:
+        return candidates[0]
+    ex = engine.executor
+    in_ids = [ex.resolve(i) for i in op.in_ids]
+    known = [i for i in in_ids if i in state.M]
+    shape = ex.shapes.get(op.out_id)
+    out_elements = int(np.prod(shape)) if shape else 1
+    objective, moved, _est, load = state.simulate_cost_batch(
+        candidates, out_elements, known)
+    proj = [engine.project(op, placement=(c, None)) for c in candidates]
+    keys = zip(proj, objective.tolist(), moved.tolist(), load.tolist(),
+               candidates)
+    return candidates[min(enumerate(keys), key=lambda t: t[1])[0]]
+
+
 def make_scheduler(name: str, k: int) -> SchedulerBase:
     if name == "lshs":
         return LSHS()

@@ -32,14 +32,30 @@ def simulate_makespan(
     slow_nodes: Optional[Dict[int, float]] = None,
     speculative: bool = False,
     threshold: float = 1.5,
+    mode: str = "duplicate",
 ) -> SimResult:
     """Greedy list-schedule of ``task_costs`` onto their assigned nodes.
 
     ``slow_nodes`` maps node -> slowdown factor (e.g. {3: 10.0}).  With
-    ``speculative=True``, tasks still queued on a node whose projected finish
-    exceeds ``threshold`` x median are cloned onto the earliest-finishing
-    fast node; the earlier copy wins.
+    ``speculative=True``, the unstarted tail of a node whose projected finish
+    exceeds ``threshold`` x median is offered to the earliest-finishing other
+    node, under one of two semantics:
+
+    * ``mode="duplicate"`` (default, Ray/Spark speculation): the slow copy
+      *stays queued* on ``j`` while a duplicate runs on the target; the first
+      finisher wins and only the winner's clock advances — per task the
+      effective completion is ``min(slow copy on j, dup on tgt)``.
+    * ``mode="migrate"``: the tail is removed from ``j`` and runs only on the
+      target (work stealing — no redundant compute, but no hedge either: a
+      straggling *target* now gates completion).
+
+    Historical note: this function once removed the tail from ``j`` while
+    claiming first-finisher-wins semantics — the min() was never taken, so a
+    "duplicate" that lost the race still charged the target and un-charged
+    ``j``.  Both semantics are now explicit and regression-tested.
     """
+    if mode not in ("duplicate", "migrate"):
+        raise ValueError(f"unknown speculation mode {mode!r}")
     slow = slow_nodes or {}
     finish = np.zeros(k)
     queues: Dict[int, List[float]] = {j: [] for j in range(k)}
@@ -48,22 +64,34 @@ def simulate_makespan(
     for j in range(k):
         finish[j] = sum(queues[j])
     duplicated = 0
-    if speculative:
+    if speculative and k > 1:
         med = float(np.median(finish))
+        others = np.arange(k)
         for j in range(k):
             if finish[j] > threshold * max(med, 1e-12) and queues[j]:
-                # migrate/duplicate the tail of j's queue to fast nodes
+                # speculate on the unstarted tail of j's queue
                 tail = queues[j][len(queues[j]) // 2 :]
                 queues[j] = queues[j][: len(queues[j]) // 2]
                 finish[j] = sum(queues[j])
+                mask = others != j
                 for cost in tail:
-                    tgt = int(np.argmin(finish))
+                    # earliest-finishing *other* node hosts the copy
+                    tgt = int(others[mask][np.argmin(finish[mask])])
                     base = cost / slow.get(j, 1.0)  # original cost
                     dup_cost = base * slow.get(tgt, 1.0)
-                    # first-finisher wins: effective completion is the min of
-                    # running it (slow) on j vs duplicating on tgt
-                    finish[tgt] += dup_cost
                     duplicated += 1
+                    if mode == "migrate":
+                        finish[tgt] += dup_cost
+                        continue
+                    # duplicate: both copies race; first finisher wins and
+                    # the loser is cancelled, so only one clock advances —
+                    # effective completion = min(slow copy on j, dup on tgt)
+                    t_slow = finish[j] + cost
+                    t_dup = finish[tgt] + dup_cost
+                    if t_dup <= t_slow:
+                        finish[tgt] = t_dup
+                    else:
+                        finish[j] = t_slow
     return SimResult(float(finish.max()), finish, duplicated)
 
 

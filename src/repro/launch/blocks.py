@@ -18,6 +18,10 @@ The ``--fail-node`` flag injects a node failure while pipelined ops are
 still queued, then recovers from lineage — the fault-tolerance path of the
 async executor (replayed plans record lineage exactly like cold schedules,
 so recovery works identically with the cache on).
+
+``--chaos`` delegates to the full chaos scenario driver (``launch.chaos``):
+stragglers + live node death + transient faults composed on the logreg-Newton
+loop, with a fault-free reference run and bit-identity / determinism checks.
 """
 from __future__ import annotations
 
@@ -99,7 +103,22 @@ def main() -> None:
     ap.add_argument("--fail-node", type=int, default=None,
                     help="inject a node failure mid-run, then recover from "
                          "lineage (any data-holding backend: numpy/jax/pallas)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the composed chaos scenario instead "
+                         "(launch.chaos: stragglers + node death + transient "
+                         "faults on logreg-Newton, fault-free comparison)")
     args = ap.parse_args()
+
+    if args.chaos:
+        from .chaos import run_chaos_scenario
+        backend = "numpy" if args.backend == "sim" else args.backend
+        report = run_chaos_scenario(
+            nodes=args.nodes, workers=args.workers, backend=backend,
+            iters=max(args.iters, 3), seed=args.seed,
+            scheduler=args.scheduler, plan_cache=args.plan_cache,
+        )
+        print(json.dumps(report, indent=2, default=float))
+        return
 
     ctx = ArrayContext(
         cluster=ClusterSpec(args.nodes, args.workers),

@@ -1,0 +1,275 @@
+"""Chaos scenario driver: the logreg-Newton workload under live fault
+injection, with optional mid-workload elastic resize and synthetic serving
+traffic — the composed "production story" behind every fault-tolerance claim.
+
+    PYTHONPATH=src python -m repro.launch.chaos --nodes 8 --iters 3 \
+        --fail-nodes 1 --stragglers 2 --slowdown 4 --fault-prob 0.02
+    PYTHONPATH=src python -m repro.launch.chaos --resize-to 6 --traffic 2
+    PYTHONPATH=src python -m repro.launch.blocks --chaos   # same scenario
+
+Every scenario runs **twice with identical host-side decisions** — once
+fault-free (an empty ChaosPlan on the same chaos clock, so makespans are
+apples-to-apples) and once under the injected plan — and asserts the model
+coefficients and served-traffic checksum are **bit-identical**: scheduling is
+chaos-independent (see ``core.chaos``), so retries, speculation, node death +
+lineage replay, and re-routing may move work but can never change values.  A
+third run re-executes the chaos leg to check the determinism contract:
+same seed + same ChaosPlan ⇒ same chaos makespan, same retry counts, same
+speculation decisions.
+
+The fault-free vs degraded chaos-makespan ratio is the CI gate
+(``chaos-smoke``): 1 dead node + 2 stragglers (4x) must degrade the
+pipelined makespan by ≤ 50%.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import ArrayContext, ChaosPlan, ClusterSpec, RetryPolicy
+from repro.core.elastic import elastic_relayout
+from repro.glm.newton import _single_block_binary
+
+
+def _newton_iteration(ctx, X, y, beta, eye):
+    """One ridge-regularized Newton step (the Fig. 15 iteration body)."""
+    mu = (X @ beta).sigmoid().compute()
+    g = (X.T @ (mu - y)).compute()
+    w = (mu * (1.0 - mu)).compute()
+    H = ((X.T @ (w * X).compute()) + eye).compute()
+    delta = _single_block_binary(ctx, "solve", H, g).compute()
+    return (beta - delta).compute()
+
+
+def run_scenario(
+    plan: ChaosPlan,
+    *,
+    nodes: int = 8,
+    workers: int = 2,
+    backend: str = "numpy",
+    n: Optional[int] = None,
+    d: int = 32,
+    iters: int = 3,
+    seed: int = 0,
+    chaos_seed: int = 0,
+    scheduler: str = "lshs",
+    plan_cache: bool = False,
+    retry: Optional[RetryPolicy] = None,
+    resize_to: Optional[int] = None,
+    resize_at: Optional[int] = None,
+    traffic: int = 0,
+) -> Dict:
+    """One full scenario run under ``plan``: ``iters`` Newton iterations on
+    an (n, d) design matrix split over ``2 * nodes`` row blocks, with an
+    optional elastic resize to ``resize_to`` nodes after iteration
+    ``resize_at`` (default: the middle one) and ``traffic`` synthetic
+    serving requests (seeded ragged decode-shaped matmuls) interleaved per
+    iteration.  Host-side decisions (sizes, seeds, traffic trace) are pure
+    functions of the arguments — never of the plan — so two runs that differ
+    only in ``plan`` are output-bit-comparable.
+    """
+    n = n or 64 * nodes
+    q = 2 * nodes
+    ctx = ArrayContext(
+        cluster=ClusterSpec(nodes, workers), node_grid=(nodes, 1),
+        scheduler=scheduler, backend=backend, pipeline=True, seed=seed,
+        plan_cache=plan_cache,
+    )
+    engine = ctx.enable_chaos(plan, seed=chaos_seed, retry=retry)
+    X = ctx.random((n, d), grid=(q, 1))
+    y = ctx.uniform((n, 1), grid=(q, 1))
+    beta = ctx.zeros((d, 1), grid=(1, 1))
+    eye = ctx.from_numpy(1e-3 * np.eye(d), grid=(1, 1))
+    W = ctx.random((d, d), grid=(1, 1)) if traffic else None
+    # serving-batcher synthetic traffic: a seeded trace of ragged
+    # micro-batch row counts, drawn up-front so the request schedule is a
+    # function of (seed, iters, traffic) alone
+    traffic_rng = np.random.default_rng(seed * 7919 + 17)
+    trace = [[int(traffic_rng.integers(1, 9)) for _ in range(traffic)]
+             for _ in range(iters)]
+    served = 0
+    checksum = 0.0
+    relayout_moved = 0
+    resize_at = iters // 2 if resize_at is None else resize_at
+    for it in range(iters):
+        beta = _newton_iteration(ctx, X, y, beta, eye)
+        for rows in trace[it]:
+            Xq = ctx.from_numpy(
+                traffic_rng.standard_normal((rows, d)), grid=(1, 1))
+            out = (Xq @ W).sigmoid().compute().to_numpy()
+            served += 1
+            checksum += float(out.sum())
+        if resize_to and it == resize_at and resize_to != ctx.cluster.num_nodes:
+            persist = [X, y, beta, eye] + ([W] if W is not None else [])
+            ctx, arrs, relayout_moved = elastic_relayout(
+                ctx, persist, ClusterSpec(resize_to, workers),
+                new_node_grid=(resize_to, 1), scheduler=scheduler)
+            X, y, beta, eye = arrs[:4]
+            if W is not None:
+                W = arrs[4]
+    ctx.flush()
+    out_beta = beta.to_numpy()
+    return {
+        "beta": out_beta,
+        "served": served,
+        "checksum": checksum,
+        "relayout_moved": relayout_moved,
+        "engine": engine,
+        "ctx": ctx,
+        "chaos_makespan": engine.makespan(),
+        "nominal_makespan": ctx.state.makespan(pipeline=True),
+    }
+
+
+def run_chaos_scenario(
+    *,
+    nodes: int = 8,
+    workers: int = 2,
+    backend: str = "numpy",
+    n: Optional[int] = None,
+    d: int = 32,
+    iters: int = 3,
+    seed: int = 0,
+    chaos_seed: int = 0,
+    fail_nodes: int = 1,
+    stragglers: int = 2,
+    slowdown: float = 4.0,
+    fault_prob: float = 0.02,
+    link_degradation: float = 1.0,
+    fail_at_frac: float = 0.4,
+    speculation: bool = True,
+    spec_threshold: float = 1.5,
+    resize_to: Optional[int] = None,
+    resize_at: Optional[int] = None,
+    traffic: int = 0,
+    scheduler: str = "lshs",
+    plan_cache: bool = False,
+    check_determinism: bool = True,
+) -> Dict:
+    """Fault-free vs chaos comparison on one scenario (module docstring).
+
+    Builds a ChaosPlan with ``fail_nodes`` node deaths (highest node ids,
+    timed at ``fail_at_frac`` × the fault-free chaos makespan), ``stragglers``
+    slowed nodes (ids 1..stragglers at ``slowdown``×), per-dispatch transient
+    faults and link degradation; runs the fault-free reference, the chaos
+    leg, and (optionally) a determinism re-run.  Returns a flat JSON-able
+    report — ``identical``, ``deterministic``, ``makespan_ratio`` and the
+    chaos counters are the CI gate inputs.
+    """
+    kw = dict(nodes=nodes, workers=workers, backend=backend, n=n, d=d,
+              iters=iters, seed=seed, chaos_seed=chaos_seed,
+              scheduler=scheduler, plan_cache=plan_cache,
+              resize_to=resize_to, resize_at=resize_at, traffic=traffic)
+    base = run_scenario(ChaosPlan(speculation=speculation,
+                                  spec_threshold=spec_threshold), **kw)
+    base_mk = base["chaos_makespan"]
+    # retry backoff scaled to the workload: first backoff ~ one average op
+    retry = RetryPolicy(backoff_base=base_mk / max(
+        base["ctx"].executor.stats.n_queued, 1))
+    failures = {nodes - 1 - i: fail_at_frac * base_mk for i in range(fail_nodes)}
+    slow = {1 + i: slowdown for i in range(stragglers)}
+    plan = ChaosPlan(
+        node_failures=tuple(failures.items()),
+        stragglers=tuple(slow.items()),
+        transient_fault_prob=fault_prob,
+        link_degradation=link_degradation,
+        speculation=speculation,
+        spec_threshold=spec_threshold,
+    )
+    chaos = run_scenario(plan, retry=retry, **kw)
+    identical = (
+        base["beta"].tobytes() == chaos["beta"].tobytes()
+        and base["served"] == chaos["served"]
+        and base["checksum"] == chaos["checksum"]
+    )
+    deterministic = True
+    if check_determinism:
+        rerun = run_scenario(plan, retry=retry, **kw)
+        deterministic = (
+            rerun["chaos_makespan"] == chaos["chaos_makespan"]
+            and rerun["engine"].stats == chaos["engine"].stats
+            and rerun["beta"].tobytes() == chaos["beta"].tobytes()
+        )
+    stats = chaos["engine"].stats
+    report = {
+        "nodes": nodes, "workers": workers, "backend": backend,
+        "n": n or 64 * nodes, "d": d, "iters": iters,
+        "fail_nodes": fail_nodes, "stragglers": stragglers,
+        "slowdown": slowdown, "fault_prob": fault_prob,
+        "link_degradation": link_degradation,
+        "resize_to": resize_to, "traffic": traffic,
+        "served": chaos["served"],
+        "relayout_moved": chaos["relayout_moved"],
+        "makespan_faultfree": base_mk,
+        "makespan_chaos": chaos["chaos_makespan"],
+        "makespan_ratio": chaos["chaos_makespan"] / max(base_mk, 1e-300),
+        "makespan_nominal_pipelined": chaos["nominal_makespan"],
+        "identical": identical,
+        "deterministic": deterministic,
+    }
+    report.update(stats.as_dict())
+    report["chaos_dead_nodes"] = sorted(chaos["engine"].dead)
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--backend", default="numpy",
+                    choices=("numpy", "jax", "pallas"))
+    ap.add_argument("--n", type=int, default=None,
+                    help="design-matrix rows (default 64 * nodes)")
+    ap.add_argument("--d", type=int, default=32)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--fail-nodes", type=int, default=1,
+                    help="nodes killed mid-run (highest ids)")
+    ap.add_argument("--stragglers", type=int, default=2)
+    ap.add_argument("--slowdown", type=float, default=4.0)
+    ap.add_argument("--fault-prob", type=float, default=0.02)
+    ap.add_argument("--link-degradation", type=float, default=1.0)
+    ap.add_argument("--fail-at-frac", type=float, default=0.4)
+    ap.add_argument("--no-speculation", dest="speculation",
+                    action="store_false")
+    ap.add_argument("--spec-threshold", type=float, default=1.5)
+    ap.add_argument("--resize-to", type=int, default=None,
+                    help="elastic resize to this node count mid-run")
+    ap.add_argument("--resize-at", type=int, default=None)
+    ap.add_argument("--traffic", type=int, default=0,
+                    help="synthetic serving requests per iteration")
+    ap.add_argument("--scheduler", default="lshs",
+                    choices=("lshs", "lshs+", "roundrobin", "dynamic"))
+    ap.add_argument("--plan-cache", dest="plan_cache", action="store_true")
+    ap.add_argument("--assert-gate", action="store_true",
+                    help="exit nonzero unless identical + deterministic and "
+                         "makespan_ratio <= 1.5")
+    args = ap.parse_args()
+    report = run_chaos_scenario(
+        nodes=args.nodes, workers=args.workers, backend=args.backend,
+        n=args.n, d=args.d, iters=args.iters, seed=args.seed,
+        chaos_seed=args.chaos_seed, fail_nodes=args.fail_nodes,
+        stragglers=args.stragglers, slowdown=args.slowdown,
+        fault_prob=args.fault_prob, link_degradation=args.link_degradation,
+        fail_at_frac=args.fail_at_frac, speculation=args.speculation,
+        spec_threshold=args.spec_threshold, resize_to=args.resize_to,
+        resize_at=args.resize_at, traffic=args.traffic,
+        scheduler=args.scheduler, plan_cache=args.plan_cache,
+    )
+    print(json.dumps(report, indent=2, default=float))
+    if args.assert_gate:
+        ok = (report["identical"] and report["deterministic"]
+              and report["makespan_ratio"] <= 1.5)
+        if not ok:
+            raise SystemExit("chaos gate FAILED: "
+                             f"identical={report['identical']} "
+                             f"deterministic={report['deterministic']} "
+                             f"ratio={report['makespan_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -432,6 +432,35 @@ def test_fail_node_recover_parity(backend):
     # recovery re-executes through the same backend's cached kernels:
     # recovered blocks are bit-identical, not merely close
     assert np.array_equal(before, after)
+    # replays run through the backend and its counter records them
+    assert ctx.executor.backend.stats.replays == replayed
+
+
+def test_chaos_kill_mid_flush_replays_through_jax_backend():
+    """Node death injected *while the pipelined drain is running* on the
+    compiled backend: the chaos engine kills the node between retirements,
+    lost device-resident blocks replay from lineage on survivors through the
+    same jitted kernels, and the output stays bit-identical to a fault-free
+    jax run."""
+    from repro.core import ChaosPlan
+
+    def graph(ctx):
+        A = ctx.random((32, 32), grid=(4, 4))
+        B = ctx.random((32, 32), grid=(4, 4))
+        return ((A @ B) + A).compute().to_numpy()
+
+    ref = graph(_ctx("jax", k=4, r=2, ng=(2, 2), pipeline=True))
+    ctx = _ctx("jax", k=4, r=2, ng=(2, 2), pipeline=True)
+    eng = ctx.enable_chaos(ChaosPlan(node_failures={1: 0.0}))
+    out = graph(ctx)  # compute() drains; the kill fires mid-flush
+    assert out.tobytes() == ref.tobytes()
+    assert eng.dead == {1}
+    assert eng.stats.blocks_lost > 0
+    assert eng.stats.blocks_replayed > 0
+    # the replay counter on the *backend* moved: recovery executed compiled
+    # kernels, not the interpreter
+    assert ctx.executor.backend.stats.replays == eng.stats.blocks_replayed
+    assert ctx.executor.backend.stats.as_dict()["backend_replays"] > 0
 
 
 def test_sim_mode_has_no_backend():
