@@ -63,9 +63,12 @@ def run(quick: bool = True) -> None:
                  f"spec={r['chaos_speculated']} wins={r['chaos_spec_wins']}")
 
 
-def write_trajectory(report: dict, path: str = TRAJECTORY) -> None:
-    """Append this run's smoke report to the BENCH_chaos.json trajectory
-    (a list of per-commit entries keyed by git SHA)."""
+def write_trajectory(report: dict, path: str = TRAJECTORY,
+                     keep: tuple = None) -> None:
+    """Append this run's smoke report to a per-commit trajectory file (a
+    list of entries keyed by git SHA).  ``keep`` selects which report keys
+    are persisted; the default is the chaos gate set — other suites
+    (bench_linalg) pass their own tuple and path."""
     entries = []
     if os.path.exists(path):
         with open(path) as f:
@@ -76,12 +79,13 @@ def write_trajectory(report: dict, path: str = TRAJECTORY) -> None:
             text=True, cwd=os.path.dirname(path)).stdout.strip() or "unknown"
     except OSError:
         sha = "unknown"
-    keep = ("makespan_faultfree", "makespan_chaos", "makespan_ratio",
-            "identical", "deterministic", "chaos_transient_faults",
-            "chaos_retries", "chaos_escalations", "chaos_speculated",
-            "chaos_spec_wins", "chaos_spec_cancelled", "chaos_nodes_failed",
-            "chaos_blocks_lost", "chaos_blocks_replayed",
-            "chaos_rerouted_ops", "nodes", "iters")
+    if keep is None:
+        keep = ("makespan_faultfree", "makespan_chaos", "makespan_ratio",
+                "identical", "deterministic", "chaos_transient_faults",
+                "chaos_retries", "chaos_escalations", "chaos_speculated",
+                "chaos_spec_wins", "chaos_spec_cancelled", "chaos_nodes_failed",
+                "chaos_blocks_lost", "chaos_blocks_replayed",
+                "chaos_rerouted_ops", "nodes", "iters")
     entries.append({"commit": sha, **{k: report[k] for k in keep}})
     with open(path, "w") as f:
         json.dump(entries, f, indent=2, default=float)

@@ -1,0 +1,160 @@
+"""Communication-avoiding linalg benchmark: moved bytes vs lower bounds.
+
+``linalg_smoke()`` is the CI bench-smoke ``linalg`` section: TSQR, blocked
+Cholesky, and randomized SVD scheduled on simulated clusters, reporting the
+measured ``ClusterState`` network elements, the matching ``core.bounds``
+moved-element floor, their ratio (the comm-bound gate metric), and the
+simulated-clock makespan.  All quantities are deterministic — no wall-timer
+noise in the gate.
+
+``run()`` emits CSV rows: numpy-oracle wall times, measured wall times on
+the selected backend, and simulated comm ratios across cluster sizes.
+``python -m benchmarks.bench_linalg`` appends the smoke report to
+``BENCH_linalg.json`` at the repo root — the per-commit trajectory of every
+gated ratio.
+
+    PYTHONPATH=src python -m benchmarks.run --only linalg
+    PYTHONPATH=src python -m benchmarks.bench_linalg  # writes BENCH_linalg.json
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import ArrayContext, ClusterSpec
+from repro.linalg import cholesky, cholesky_solve, rsvd, tsqr_indirect
+
+from . import common
+from .common import emit, timeit
+
+TRAJECTORY = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_linalg.json")
+
+
+def _spd(rng: np.random.Generator, n: int) -> np.ndarray:
+    m = rng.standard_normal((n, n))
+    return m @ m.T + n * np.eye(n)
+
+
+def _comm_section(ctx: ArrayContext, op: str) -> dict:
+    loads = ctx.loads()
+    moved = loads[f"comm_moved_{op}"]
+    bpe = np.dtype(ctx.dtype).itemsize
+    return {
+        "moved_elements": moved,
+        "moved_bytes": moved * bpe,
+        "lower_elements": loads[f"comm_lower_{op}"],
+        "comm_ratio": loads[f"comm_ratio_{op}"],
+        "makespan": loads["makespan"],
+    }
+
+
+def tsqr_section(k: int = 4, q: int = 16, d: int = 64) -> dict:
+    ctx = ArrayContext(cluster=ClusterSpec(k, 4), node_grid=(k, 1),
+                       backend="sim")
+    X = ctx.random((q * 1024, d), grid=(q, 1))
+    ctx.reset_loads()
+    tsqr_indirect(ctx, X)
+    return _comm_section(ctx, "tsqr")
+
+
+def cholesky_section(k: int = 4, q: int = 4, n: int = 256) -> dict:
+    ctx = ArrayContext(cluster=ClusterSpec(k, 2), node_grid=(k, 1),
+                       backend="sim")
+    A = ctx.random((n, n), grid=(q, q))
+    ctx.reset_loads()
+    cholesky(ctx, A)
+    return _comm_section(ctx, "cholesky")
+
+
+def rsvd_section(k: int = 4, q: int = 8) -> dict:
+    ctx = ArrayContext(cluster=ClusterSpec(k, 2), node_grid=(k, 1),
+                       backend="sim")
+    A = ctx.random((q * 256, 32), grid=(q, 1))
+    ctx.reset_loads()
+    rsvd(ctx, A, rank=8, oversample=8, power_iters=1)
+    return _comm_section(ctx, "rsvd")
+
+
+def linalg_smoke() -> dict:
+    """Deterministic simulated-cluster comm accounting for the bench-smoke
+    ``linalg`` gate (measured moved elements ≤ constant × bounds floor)."""
+    return {
+        "tsqr": tsqr_section(),
+        "cholesky": cholesky_section(),
+        "rsvd": rsvd_section(),
+    }
+
+
+def flatten_report(report: dict) -> dict:
+    """``{section: {key: val}}`` → ``{f"{section}_{key}": val}`` for the
+    per-commit trajectory file."""
+    return {f"{sec}_{key}": val
+            for sec, d in report.items() for key, val in d.items()}
+
+
+def run(quick: bool = True) -> None:
+    rng = np.random.default_rng(0)
+    n = 256 if quick else 1024
+    a_np = _spd(rng, n)
+    b_np = rng.standard_normal((n, 4))
+
+    t_np = timeit(lambda: np.linalg.cholesky(a_np), repeats=3)
+    emit("linalg.cholesky.numpy_oracle", t_np * 1e6, "")
+
+    q = 4
+
+    def chol_run():
+        ctx = ArrayContext(cluster=ClusterSpec(4, 2), node_grid=(4, 1),
+                           backend=common.BACKEND)
+        A = ctx.from_numpy(a_np, grid=(q, q))
+        L = cholesky(ctx, A)
+        cholesky_solve(ctx, L, ctx.from_numpy(b_np, grid=(q, 1)))
+        return ctx
+
+    t = timeit(chol_run, repeats=3 if quick else 7)
+    ctx = chol_run()
+    loads = ctx.loads()
+    emit("linalg.cholesky.blocked", t * 1e6,
+         f"vs_numpy={t / t_np:.2f}x;moved={int(loads['comm_moved_cholesky'])}"
+         f";ratio={loads['comm_ratio_cholesky']:.2f}")
+
+    m, d = (2048, 32) if quick else (1 << 14, 64)
+    x_np = rng.standard_normal((m, d))
+    t_np = timeit(lambda: np.linalg.svd(x_np, full_matrices=False), repeats=3)
+    emit("linalg.svd.numpy_oracle", t_np * 1e6, "")
+
+    def rsvd_run():
+        ctx = ArrayContext(cluster=ClusterSpec(4, 2), node_grid=(4, 1),
+                           backend=common.BACKEND)
+        X = ctx.from_numpy(x_np, grid=(8, 1))
+        rsvd(ctx, X, rank=8, oversample=8, power_iters=1)
+        return ctx
+
+    t = timeit(rsvd_run, repeats=3 if quick else 7)
+    ctx = rsvd_run()
+    loads = ctx.loads()
+    emit("linalg.rsvd.rank8", t * 1e6,
+         f"vs_numpy={t / t_np:.2f}x;moved={int(loads['comm_moved_rsvd'])}"
+         f";ratio={loads['comm_ratio_rsvd']:.2f}")
+
+    # simulated comm-bound ratios across cluster sizes — the gated metric
+    for k in (2, 4, 8) if quick else (2, 4, 8, 16):
+        for name, sec in (("tsqr", tsqr_section(k=k)),
+                          ("cholesky", cholesky_section(k=k)),
+                          ("rsvd", rsvd_section(k=k))):
+            emit(f"linalg.comm.{name}.k{k}", 0.0,
+                 f"moved={int(sec['moved_elements'])}"
+                 f";lower={int(sec['lower_elements'])}"
+                 f";ratio={sec['comm_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    from .bench_chaos import write_trajectory
+
+    report = linalg_smoke()
+    print(json.dumps(report, indent=2, default=float))
+    flat = flatten_report(report)
+    write_trajectory(flat, path=TRAJECTORY, keep=tuple(flat))

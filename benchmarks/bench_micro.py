@@ -200,6 +200,8 @@ def smoke() -> dict:
     result["backend"] = backend_section()
     from . import bench_chaos
     result["chaos"] = bench_chaos.chaos_smoke()
+    from . import bench_linalg
+    result["linalg"] = bench_linalg.linalg_smoke()
     return result
 
 

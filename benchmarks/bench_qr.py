@@ -19,14 +19,22 @@ def run(quick: bool = True) -> None:
     emit("qr.numpy_oracle", t_np * 1e6, "")
 
     for name, fn in (("direct", tsqr_direct), ("indirect", tsqr_indirect)):
-        def run_one():
+        comm_key = "tsqr_direct" if name == "direct" else "tsqr"
+
+        def run_one(fn=fn):
             ctx = ArrayContext(cluster=ClusterSpec(4, 4), node_grid=(4, 1),
                                backend=common.BACKEND)
             X = ctx.from_numpy(x_np, grid=(16, 1))
             fn(ctx, X)
+            return ctx
 
         t = timeit(run_one, repeats=3 if quick else 7)
-        emit(f"qr.tsqr_{name}", t * 1e6, f"vs_numpy={t / t_np:.2f}x")
+        ctx = run_one()
+        loads = ctx.loads()
+        moved_b = loads[f"comm_moved_{comm_key}"] * np.dtype(ctx.dtype).itemsize
+        emit(f"qr.tsqr_{name}", t * 1e6,
+             f"vs_numpy={t / t_np:.2f}x;moved_bytes={int(moved_b)}"
+             f";ratio={loads[f'comm_ratio_{comm_key}']:.2f}")
 
     # weak scaling (simulated): double rows with nodes; objective per node
     for k in (2, 4, 8, 16):
@@ -36,8 +44,11 @@ def run(quick: bool = True) -> None:
         ctx.reset_loads()
         tsqr_indirect(ctx, X)
         s = ctx.state.summary()
+        loads = ctx.loads()
         emit(f"qr.weak_scaling.k{k}", 0.0,
-             f"max_mem={int(s['max_mem'])};net={int(s['total_net'])}")
+             f"max_mem={int(s['max_mem'])};net={int(s['total_net'])}"
+             f";moved_bytes={int(loads['comm_moved_tsqr'] * 8)}"
+             f";ratio={loads['comm_ratio_tsqr']:.2f}")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ from . import (
     bench_serving,
     bench_datasci,
     bench_dgemm,
+    bench_linalg,
     bench_logreg,
     bench_micro,
     bench_overhead,
@@ -40,6 +41,7 @@ SUITES = {
     "overhead": bench_overhead,  # Fig. 8
     "dgemm": bench_dgemm,        # Fig. 10 / Table 2
     "qr": bench_qr,              # Fig. 11 / 12a
+    "linalg": bench_linalg,      # §8 comm-avoiding Cholesky/rSVD + ratios
     "tensor": bench_tensor,      # Fig. 13
     "logreg": bench_logreg,      # Fig. 12b / 14 / 15
     "datasci": bench_datasci,    # Table 3 / Fig. 16

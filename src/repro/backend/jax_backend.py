@@ -244,6 +244,20 @@ class JaxBackend(BlockBackend):
             return lambda h, g: jnp.linalg.solve(h, g)
         if op == "rsolve":
             return lambda x, r: jnp.linalg.solve(r.T, x.T).T
+        if op == "tsolve":
+            return lambda a, b: jnp.linalg.solve(a.T, b)
+        if op == "potrf":
+            return lambda x: jnp.linalg.cholesky(x)
+        if op == "trsm":
+            return lambda a, l: jnp.linalg.solve(l, a.T).T
+        if op == "syrk_update":
+            return lambda c, a, b: c - a @ b.T
+        if op == "svd_u":
+            return lambda x: jnp.linalg.svd(x, full_matrices=False)[0]
+        if op == "svd_s":
+            return lambda x: jnp.linalg.svd(x, full_matrices=False)[1]
+        if op == "svd_vt":
+            return lambda x: jnp.linalg.svd(x, full_matrices=False)[2]
         return None
 
     @property

@@ -138,3 +138,70 @@ BOUNDS = {
     "matmul_lshs": square_matmul_lshs,
     "matmul_summa": square_matmul_summa,
 }
+
+
+# -- moved-element floors for the communication-avoiding linalg suite ---------
+#
+# Unlike the Appendix A *time* formulas above, these price a scheduled
+# subgraph in *network elements* — the unit ``ClusterState`` measures — so a
+# run's measured transfer volume divides by them directly.  Each is the floor
+# a communication-optimal schedule attains in the paper's caching model (a
+# block is transmitted to a node at most once, §5.1) when the operation's
+# output blocks are forced onto a balanced hierarchical layout; the CI
+# bench-smoke ``linalg`` gate asserts measured ≤ constant × floor, turning
+# every scheduler change into a checked comm-bound claim.
+
+def tsqr_lower_elements(d: int, k: int, q: int) -> float:
+    """Indirect (tree) TSQR of a ``(n, d)`` array in ``q`` row blocks over
+    ``k`` nodes: the per-block ``(d, d)`` R factors reduce to one — after
+    per-node locality pairing at least ``k' - 1`` merges cross node
+    boundaries (``k' = min(k, q)`` nodes hold blocks), each moving one R —
+    and recovering ``Q = X R^{-1}`` broadcasts the final R back to the
+    ``k' - 1`` non-resident nodes."""
+    kk = min(k, q)
+    return 2.0 * max(kk - 1, 0) * d * d
+
+
+def cholesky_lower_elements(n: int, q: int, k: int) -> float:
+    """Blocked right-looking Cholesky of an ``(n, n)`` array on a ``(q, q)``
+    grid over ``k`` nodes, output forced onto a balanced row layout: at step
+    ``t`` the diagonal factor must reach the (up to ``k - 1``) other nodes
+    owning panel rows, and every panel block ``L[j, t]`` must reach the
+    nodes owning the trailing rows ``> j`` whose updates consume it."""
+    b = n / max(q, 1)
+    hops = 0.0
+    for t in range(q):
+        hops += min(k - 1, q - t - 1)          # diagonal-block broadcast
+        for j in range(t + 1, q):
+            hops += min(k - 1, q - j - 1)      # panel-block fan-out
+    return hops * b * b
+
+
+def rsvd_lower_elements(d: int, sketch: int, k: int, q: int,
+                        power_iters: int = 0) -> float:
+    """Randomized SVD of a ``(m, d)`` array in ``q`` row blocks over ``k``
+    nodes with an ``(d, sketch)`` Gaussian test matrix: broadcast the sketch
+    to the ``k' - 1`` non-resident nodes, tree-reduce the ``(d, sketch)``
+    projection core (``k' - 1`` cross merges), TSQR the sample matrix, and
+    broadcast the ``(sketch, sketch)`` rotation for ``U = Q U_b``.  Each
+    power iteration repeats the projection round trip and the TSQR."""
+    kk = min(k, q)
+    x = max(kk - 1, 0)
+    per_proj = 2.0 * x * d * sketch            # reduce core + broadcast back
+    one_pass = (
+        x * d * sketch                          # sketch broadcast
+        + tsqr_lower_elements(sketch, k, q)     # TSQR of the sample matrix
+        + x * d * sketch                        # B^T = A^T Q reduce tree
+        + x * sketch * sketch                   # U_b rotation broadcast
+    )
+    return one_pass + power_iters * (per_proj + tsqr_lower_elements(sketch, k, q))
+
+
+def comm_ratio(measured_elements: float, lower_elements: float) -> float:
+    """Measured network elements over the matching moved-element floor — the
+    CI-gated comm-bound ratio.  A zero floor (single-node run) with zero
+    measured traffic is exactly at the bound (1.0); moving bytes when the
+    floor is zero is unboundedly bad (inf)."""
+    if lower_elements <= 0.0:
+        return 1.0 if measured_elements <= 0.0 else float("inf")
+    return float(measured_elements) / float(lower_elements)

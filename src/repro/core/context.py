@@ -273,6 +273,12 @@ class ArrayContext:
         d["dispatch_s"] = self.sched_stats.dispatch_s
         d["reshards"] = self.sched_stats.reshards
         d["reshard_moved"] = self.sched_stats.reshard_moved_elements
+        # comm-bound accounting: per linalg op, measured network elements /
+        # moved-element floor (``bounds`` §"moved-element floors")
+        for op, ratio in self.sched_stats.comm_ratios.items():
+            d[f"comm_moved_{op}"] = self.sched_stats.comm_moved[op]
+            d[f"comm_lower_{op}"] = self.sched_stats.comm_lower[op]
+            d[f"comm_ratio_{op}"] = ratio
         # backend substrate counters: per-op dispatches, compiled-callable
         # invocations, host/device transfers, and the structural
         # compile-cache hit/miss/compile-time split (jax/pallas)

@@ -204,6 +204,21 @@ def execute_block_op(op: str, meta: Dict[str, Any], inputs: Sequence[np.ndarray]
         return np.linalg.solve(inputs[0], inputs[1])
     if op == "rsolve":  # X R^{-1} (indirect TSQR, §8.3)
         return np.linalg.solve(inputs[1].T, inputs[0].T).T
+    if op == "tsolve":  # A^{-T} b — the L^T x = y back-substitution step
+        return np.linalg.solve(inputs[0].T, inputs[1])
+    if op == "potrf":  # lower Cholesky factor of a diagonal block
+        return np.linalg.cholesky(inputs[0])
+    if op == "trsm":  # Cholesky panel update A_it L_tt^{-T}
+        return np.linalg.solve(inputs[1], inputs[0].T).T
+    if op == "syrk_update":  # trailing update C - A B^T (syrk when A is B)
+        c, a, b = inputs
+        return c - a @ b.T
+    if op == "svd_u":  # thin-SVD factors of a small-core block (rSVD §8.3)
+        return np.linalg.svd(inputs[0], full_matrices=False)[0]
+    if op == "svd_s":
+        return np.linalg.svd(inputs[0], full_matrices=False)[1]
+    if op == "svd_vt":
+        return np.linalg.svd(inputs[0], full_matrices=False)[2]
     raise KeyError(f"unknown block op {op!r}")
 
 
@@ -278,6 +293,23 @@ def infer_shape(op: str, meta: Dict[str, Any], in_shapes: Sequence[Tuple[int, ..
         return tuple(in_shapes[1])
     if op == "rsolve":
         return tuple(in_shapes[0])
+    if op == "tsolve":
+        return tuple(in_shapes[1])
+    if op == "potrf":
+        return tuple(in_shapes[0])
+    if op == "trsm":
+        return tuple(in_shapes[0])
+    if op == "syrk_update":
+        return tuple(in_shapes[0])
+    if op == "svd_u":
+        m, n = in_shapes[0]
+        return (m, min(m, n))
+    if op == "svd_s":
+        m, n = in_shapes[0]
+        return (min(m, n),)
+    if op == "svd_vt":
+        m, n = in_shapes[0]
+        return (min(m, n), n)
     raise KeyError(f"unknown block op {op!r}")
 
 

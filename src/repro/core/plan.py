@@ -426,6 +426,24 @@ class SchedStats:
     backend_compile_misses: int = 0
     backend_compile_s: float = 0.0
     backend_jit_calls: int = 0
+    # communication-bound accounting (``core.bounds`` moved-element floors):
+    # per linalg op, the measured ``ClusterState`` network elements a
+    # scheduled subgraph moved, the matching lower bound, and their ratio —
+    # the CI-gated comm-avoidance metric
+    comm_moved: Dict[str, float] = field(default_factory=dict)
+    comm_lower: Dict[str, float] = field(default_factory=dict)
+    comm_ratios: Dict[str, float] = field(default_factory=dict)
+
+    def note_comm(self, op: str, moved_elements: float,
+                  lower_elements: float) -> None:
+        """Record one op's measured network elements against its
+        moved-element floor (``bounds.comm_ratio``); repeated calls for the
+        same op accumulate both sides so iterative loops report an overall
+        ratio rather than the last iteration's."""
+        from .bounds import comm_ratio
+        self.comm_moved[op] = self.comm_moved.get(op, 0.0) + float(moved_elements)
+        self.comm_lower[op] = self.comm_lower.get(op, 0.0) + float(lower_elements)
+        self.comm_ratios[op] = comm_ratio(self.comm_moved[op], self.comm_lower[op])
 
     def note_backend(self, backend) -> None:
         """Refresh the backend compile counters from a ``BlockBackend``."""
@@ -450,7 +468,7 @@ class SchedStats:
         return self.plan_hits / total if total else 0.0
 
     def as_dict(self) -> Dict[str, float]:
-        return {
+        out: Dict[str, float] = {
             "computes": self.computes,
             "plan_hits": self.plan_hits,
             "plan_misses": self.plan_misses,
@@ -470,6 +488,11 @@ class SchedStats:
             "backend_compile_s": self.backend_compile_s,
             "backend_jit_calls": self.backend_jit_calls,
         }
+        for op in self.comm_ratios:
+            out[f"comm_moved_{op}"] = self.comm_moved[op]
+            out[f"comm_lower_{op}"] = self.comm_lower[op]
+            out[f"comm_ratio_{op}"] = self.comm_ratios[op]
+        return out
 
     def reset(self) -> None:
         self.computes = 0
@@ -482,3 +505,6 @@ class SchedStats:
         self.reshards = 0
         self.reshard_ops = 0
         self.reshard_moved_elements = 0.0
+        self.comm_moved.clear()
+        self.comm_lower.clear()
+        self.comm_ratios.clear()

@@ -16,6 +16,7 @@ from typing import Tuple
 import numpy as np
 
 from repro.core import ArrayContext, GraphArray
+from repro.core import bounds
 from repro.core.grid import ArrayGrid
 from repro.core.graph_array import Vertex, infer_shape
 
@@ -33,9 +34,16 @@ def tsqr_direct(ctx: ArrayContext, X: GraphArray) -> Tuple[GraphArray, GraphArra
     n, d = X.shape
     q = X.grid.grid[0]
     if X.grid.grid[1] != 1:
-        raise ValueError("direct TSQR requires a single column partition")
-    if any(X.grid.block_sizes(0)[i] < d for i in range(q)):
-        raise ValueError("each row block must have at least d rows")
+        raise ValueError(
+            f"direct TSQR requires a single column partition, got grid "
+            f"{tuple(X.grid.grid)} for shape {X.shape}")
+    rows = X.grid.block_sizes(0)
+    for i in range(q):
+        if rows[i] < d:
+            raise ValueError(
+                f"each row block must have at least d={d} rows; block "
+                f"({i}, 0) has shape {(rows[i], d)}")
+    before = ctx.state.network_elements()
     x_blocks = [X.block((i, 0)) for i in range(q)]
     q1 = [_op("qr_q", [b]) for b in x_blocks]
     r1 = [_op("qr_r", [b]) for b in x_blocks]
@@ -57,6 +65,11 @@ def tsqr_direct(ctx: ArrayContext, X: GraphArray) -> Tuple[GraphArray, GraphArra
     Rg = _wrap(ctx, ArrayGrid((d, d), (1, 1), X.grid.dtype), r_blocks)
     ctx.compute(Rg)
     ctx.compute(Qg)
+    # direct TSQR is not communication-avoiding (all R's stack to one node);
+    # recorded under its own key so the gate only binds the indirect variant
+    ctx.sched_stats.note_comm(
+        "tsqr_direct", ctx.state.network_elements() - before,
+        bounds.tsqr_lower_elements(d, ctx.cluster.num_nodes, q))
     return Qg, Rg
 
 
@@ -64,7 +77,10 @@ def tsqr_indirect(ctx: ArrayContext, X: GraphArray) -> Tuple[GraphArray, GraphAr
     n, d = X.shape
     q = X.grid.grid[0]
     if X.grid.grid[1] != 1:
-        raise ValueError("indirect TSQR requires a single column partition")
+        raise ValueError(
+            f"indirect TSQR requires a single column partition, got grid "
+            f"{tuple(X.grid.grid)} for shape {X.shape}")
+    before = ctx.state.network_elements()
     x_blocks = [X.block((i, 0)) for i in range(q)]
     r1 = [_op("qr_r", [b]) for b in x_blocks]
     if q > 1:
@@ -81,4 +97,7 @@ def tsqr_indirect(ctx: ArrayContext, X: GraphArray) -> Tuple[GraphArray, GraphAr
         q_blocks[i, 0] = _op("rsolve", [X.block((i, 0)), Rg.block((0, 0))])
     Qg = _wrap(ctx, ArrayGrid((n, d), (q, 1), X.grid.dtype), q_blocks)
     ctx.compute(Qg)
+    ctx.sched_stats.note_comm(
+        "tsqr", ctx.state.network_elements() - before,
+        bounds.tsqr_lower_elements(d, ctx.cluster.num_nodes, q))
     return Qg, Rg
