@@ -1,0 +1,245 @@
+"""Memory-budget benchmark: refcount GC, budgeted execution, checkpoint
+recovery depth, and OOM backpressure (the bounded-recovery story behind
+ROADMAP "Memory budgets & bounded recovery").
+
+``memory_smoke()`` is the CI bench-smoke section, four sub-reports:
+
+  * gc       — logreg-Newton peak store blocks with vs without refcount GC
+               (the ratio must stay > 1: GC keeps paying for itself),
+  * budget   — logreg (numpy + jax) and CP-ALS runs under a per-node budget
+               of 0.6x the unbudgeted peak: zero per-dispatch violations and
+               bitwise-identical outputs (enforcement never changes bits),
+  * recovery — per-step checkpoints truncate lineage replay: the replayed-op
+               count after a node kill is the same at k=2 and k=5 iterations,
+  * oom      — chaos-injected budget shrink at 50% of the fault-free
+               makespan: the backpressured makespan stays within 2x.
+
+All gated quantities are deterministic (simulated clocks + exact counters).
+``write_trajectory()`` appends the flattened report to ``BENCH_memory.json``.
+
+    PYTHONPATH=src python -m benchmarks.run --only memory
+    PYTHONPATH=src python -m benchmarks.bench_memory  # writes BENCH_memory.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import ArrayContext, ClusterSpec
+from repro.launch.chaos import run_chaos_scenario
+from repro.launch.workloads import cpals_loop, logreg_newton_loop
+
+from .bench_chaos import write_trajectory as _write_trajectory
+from .common import emit
+
+TRAJECTORY = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_memory.json")
+
+MEM_KEEP = (
+    "gc_peak_ratio", "gc_freed_blocks", "gc_identical",
+    "budget_violations", "budget_evictions", "budget_identical",
+    "replay_k2", "replay_k5", "recovery_depth_ratio",
+    "oom_makespan_ratio", "oom_events", "oom_violations",
+    "oom_identical", "oom_deterministic",
+)
+
+
+def _ctx(k=4, r=2, backend="numpy", **kw):
+    return ArrayContext(cluster=ClusterSpec(k, r), node_grid=(k, 1),
+                        backend=backend, pipeline=True, **kw)
+
+
+def _newton(ctx, iters=3, n=256, d=32, q=8):
+    _g, _H, beta = logreg_newton_loop(ctx, n, d, q, iters=iters,
+                                      reset_loads=False)
+    ctx.flush()
+    return beta.to_numpy()
+
+
+def gc_section() -> dict:
+    """Peak store blocks on the logreg-Newton loop, GC off vs on."""
+    ref = _ctx()
+    bits = _newton(ref)
+    off = ref.executor.memory.stats
+    ctx = _ctx(gc=True)
+    b = _newton(ctx)
+    on = ctx.executor.memory.stats
+    return {
+        "peak_store_blocks_nogc": off.peak_store_blocks,
+        "peak_store_blocks_gc": on.peak_store_blocks,
+        "gc_peak_ratio": off.peak_store_blocks / max(on.peak_store_blocks, 1),
+        "gc_freed_blocks": on.gc_freed_blocks,
+        "identical": b.tobytes() == bits.tobytes(),
+    }
+
+
+def _budget_leg(workload, backend="numpy", frac=0.6) -> dict:
+    """One budgeted-vs-unbudgeted pair: budget = frac x the un-GC'd peak."""
+    ref = _ctx(backend=backend)
+    bits = workload(ref)
+    peak = ref.executor.memory.stats.peak_live_elements
+    cap = max(frac * peak, 1.0)
+    ctx = _ctx(backend=backend, mem_capacity=cap)
+    b = workload(ctx)
+    st = ctx.executor.memory.stats
+    return {
+        "backend": backend,
+        "capacity": cap,
+        "unbudgeted_peak": peak,
+        "violations": st.violations,
+        "evictions": st.gc_freed_blocks + st.spills + st.recompute_drops,
+        "spills": st.spills,
+        "faultins": st.faultins,
+        "backpressure_events": st.backpressure_events,
+        "identical": b.tobytes() == bits.tobytes(),
+    }
+
+
+def budget_section() -> dict:
+    def cpals(ctx):
+        f0 = cpals_loop(ctx, dim=16, rank=8, q=4, iters=2,
+                        reset_loads=False)
+        ctx.flush()
+        return f0.to_numpy()
+
+    out = {"numpy": _budget_leg(_newton, "numpy"),
+           "cpals": _budget_leg(cpals, "numpy")}
+    try:
+        out["jax"] = _budget_leg(_newton, "jax")
+    except Exception as ex:  # jax missing/broken: report, don't crash CI
+        out["jax"] = {"error": f"{type(ex).__name__}: {ex}"}
+    return out
+
+
+def _ckpt_replay(iters: int, ckdir: str, ckpt: bool = True) -> int:
+    """Replayed-op count after killing the weight block's node, with or
+    without per-step checkpoint truncation (mirrors tests/test_memory.py)."""
+    ctx = _ctx()
+    n, d, q = 128, 16, 8
+    X = ctx.random((n, d), grid=(q, 1))
+    y = ctx.uniform((n, 1), grid=(q, 1))
+    beta = ctx.zeros((d, 1), grid=(1, 1))
+    for _ in range(iters):
+        mu = (X @ beta).sigmoid().compute()
+        g = (X.T @ (mu - y)).compute()
+        beta = (beta - 0.1 * g).compute()
+        if ckpt:
+            ctx.checkpoint([beta, X, y], dir=ckdir)
+    ctx.flush()
+    bits = beta.to_numpy().tobytes()
+    ex = ctx.executor
+    vid = beta.block((0, 0)).vid
+    ex.fail_node(ex.memory.node_of[ex.resolve(vid)])
+    replayed = ex.recover([vid])
+    assert beta.to_numpy().tobytes() == bits
+    return replayed
+
+
+def recovery_section() -> dict:
+    with tempfile.TemporaryDirectory() as td:
+        r2 = _ckpt_replay(2, os.path.join(td, "c2"))
+        r5 = _ckpt_replay(5, os.path.join(td, "c5"))
+        u5 = _ckpt_replay(5, os.path.join(td, "u5"), ckpt=False)
+    return {
+        "replay_k2": r2,
+        "replay_k5": r5,
+        "replay_k5_uncheckpointed": u5,
+        # checkpointed replay depth must be k-independent: ratio ~ 1
+        "depth_ratio": r5 / max(r2, 1),
+    }
+
+
+def oom_section() -> dict:
+    """Pure memory-pressure chaos leg: budget at 0.6x the unbudgeted peak
+    plus an OOM halving node 0's budget mid-run — no deaths/stragglers, so
+    the makespan ratio isolates backpressure + eviction stalls."""
+    r = run_chaos_scenario(
+        nodes=8, workers=2, backend="numpy", iters=3, d=32,
+        fail_nodes=0, stragglers=0, slowdown=1.0, fault_prob=0.0,
+        mem_budget=0.6, oom_at=0.5)
+    return {
+        "makespan_ratio": r["makespan_ratio"],
+        "identical": r["identical"],
+        "deterministic": r["deterministic"],
+        "mem_violations": r["mem_violations"],
+        "mem_oom_events": r["mem_oom_events"],
+        "mem_spills": r["mem_spills"],
+        "mem_backpressure_events": r["mem_backpressure_events"],
+        "mem_budget_capacity": r["mem_budget_capacity"],
+    }
+
+
+def memory_smoke() -> dict:
+    return {
+        "gc": gc_section(),
+        "budget": budget_section(),
+        "recovery": recovery_section(),
+        "oom": oom_section(),
+    }
+
+
+def flat_report(smoke: dict) -> dict:
+    """Flatten the gated metrics for the BENCH_memory.json trajectory."""
+    bu = smoke["budget"]
+    legs = [bu[k] for k in ("numpy", "jax", "cpals") if "error" not in bu[k]]
+    return {
+        "gc_peak_ratio": smoke["gc"]["gc_peak_ratio"],
+        "gc_freed_blocks": smoke["gc"]["gc_freed_blocks"],
+        "gc_identical": smoke["gc"]["identical"],
+        "budget_violations": sum(x["violations"] for x in legs),
+        "budget_evictions": sum(x["evictions"] for x in legs),
+        "budget_identical": all(x["identical"] for x in legs),
+        "replay_k2": smoke["recovery"]["replay_k2"],
+        "replay_k5": smoke["recovery"]["replay_k5"],
+        "recovery_depth_ratio": smoke["recovery"]["depth_ratio"],
+        "oom_makespan_ratio": smoke["oom"]["makespan_ratio"],
+        "oom_events": smoke["oom"]["mem_oom_events"],
+        "oom_violations": smoke["oom"]["mem_violations"],
+        "oom_identical": smoke["oom"]["identical"],
+        "oom_deterministic": smoke["oom"]["deterministic"],
+    }
+
+
+def write_trajectory(smoke: dict, path: str = TRAJECTORY) -> None:
+    _write_trajectory(flat_report(smoke), path=path, keep=MEM_KEEP)
+
+
+def run(quick: bool = True) -> None:
+    smoke = memory_smoke()
+    gc = smoke["gc"]
+    emit("memory.gc.peak_store_blocks", 0.0,
+         f"nogc={gc['peak_store_blocks_nogc']};gc={gc['peak_store_blocks_gc']};"
+         f"ratio={gc['gc_peak_ratio']:.2f};identical={gc['identical']}")
+    for leg, row in smoke["budget"].items():
+        if "error" in row:
+            emit(f"memory.budget.{leg}", 0.0, row["error"])
+            continue
+        emit(f"memory.budget.{leg}", 0.0,
+             f"cap={row['capacity']:.0f};violations={row['violations']};"
+             f"evictions={row['evictions']};spills={row['spills']};"
+             f"identical={row['identical']}")
+    rc = smoke["recovery"]
+    emit("memory.recovery.replay_depth", 0.0,
+         f"k2={rc['replay_k2']};k5={rc['replay_k5']};"
+         f"unckpt_k5={rc['replay_k5_uncheckpointed']};"
+         f"ratio={rc['depth_ratio']:.2f}")
+    oo = smoke["oom"]
+    emit("memory.oom.backpressure", 0.0,
+         f"ratio={oo['makespan_ratio']:.3f};violations={oo['mem_violations']};"
+         f"oom={oo['mem_oom_events']};identical={oo['identical']}")
+    if not quick:
+        # budget sweep: how low can the budget go before spilling dominates
+        for frac in (0.8, 0.6, 0.4, 0.3):
+            row = _budget_leg(_newton, "numpy", frac=frac)
+            emit(f"memory.budget.sweep.{frac:g}", 0.0,
+                 f"violations={row['violations']};spills={row['spills']};"
+                 f"faultins={row['faultins']};identical={row['identical']}")
+
+
+if __name__ == "__main__":
+    smoke = memory_smoke()
+    print(json.dumps(smoke, indent=2, default=float))
+    write_trajectory(smoke)

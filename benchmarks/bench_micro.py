@@ -202,6 +202,8 @@ def smoke() -> dict:
     result["chaos"] = bench_chaos.chaos_smoke()
     from . import bench_linalg
     result["linalg"] = bench_linalg.linalg_smoke()
+    from . import bench_memory
+    result["memory"] = bench_memory.memory_smoke()
     return result
 
 

@@ -21,6 +21,10 @@ Gate rationale mirrors the sections it checks:
   degraded makespan within 1.5x fault-free (simulated clocks).
 - linalg: measured moved elements ≤ constant × the ``core.bounds``
   moved-element floor per op — the comm-avoidance claim, CI-enforced.
+- memory: GC must shrink the peak store (ratio > 1), budgeted runs must be
+  bit-identical with zero per-dispatch violations and live evictions,
+  checkpointed recovery depth must be k-independent (replay ratio ≤ 1.5),
+  and the OOM-backpressure makespan must stay within 2x unbudgeted.
 """
 from __future__ import annotations
 
@@ -30,6 +34,7 @@ import sys
 
 from .bench_chaos import TRAJECTORY as CHAOS_TRAJECTORY
 from .bench_linalg import TRAJECTORY as LINALG_TRAJECTORY
+from .bench_memory import TRAJECTORY as MEMORY_TRAJECTORY
 
 # measured/lower-bound ceilings per linalg op: LSHS currently schedules at
 # 1.00 (tsqr), 1.20 (cholesky), 1.05 (rsvd) on the smoke configurations, so
@@ -106,6 +111,36 @@ def check(smoke: dict) -> list:
     except KeyError as e:
         failures.append(f"linalg section malformed: missing {e}")
 
+    try:
+        mem = smoke["memory"]
+        gc = mem["gc"]
+        gate(gc["gc_peak_ratio"] > 1.0,
+             f"refcount GC no longer shrinks the peak store: {gc}")
+        gate(gc["identical"], f"GC run diverged bitwise: {gc}")
+        for leg, row in mem["budget"].items():
+            if "error" in row:
+                failures.append(f"memory.budget.{leg} errored: {row}")
+                continue
+            gate(row["violations"] == 0,
+                 f"memory.budget.{leg} budget violations: {row}")
+            gate(row["identical"],
+                 f"memory.budget.{leg} diverged bitwise: {row}")
+            gate(row["evictions"] > 0,
+                 f"memory.budget.{leg} enforcement idle (no evictions): {row}")
+        rc = mem["recovery"]
+        gate(rc["depth_ratio"] <= 1.5,
+             f"checkpointed replay depth grows with k: {rc}")
+        oo = mem["oom"]
+        gate(oo["makespan_ratio"] <= 2.0,
+             f"OOM-backpressure makespan exceeds 2x unbudgeted: {oo}")
+        gate(oo["mem_oom_events"] >= 1, f"no OOM event fired: {oo}")
+        gate(oo["mem_violations"] == 0,
+             f"budget violations under OOM injection: {oo}")
+        gate(oo["identical"], f"OOM run diverged bitwise: {oo}")
+        gate(oo["deterministic"], f"OOM run not deterministic: {oo}")
+    except KeyError as e:
+        failures.append(f"memory section malformed: missing {e}")
+
     return failures
 
 
@@ -128,6 +163,15 @@ def gated_floors(smoke: dict) -> dict:
     for op, ceiling in LINALG_RATIO_MAX.items():
         out[f"linalg.{op}.comm_ratio (<={ceiling})"] = la.get(op, {}).get(
             "comm_ratio")
+    mem = smoke.get("memory", {})
+    out["memory.gc_peak_ratio (>1)"] = mem.get("gc", {}).get("gc_peak_ratio")
+    legs = [x for x in mem.get("budget", {}).values() if "error" not in x]
+    out["memory.budget_violations (=0)"] = (
+        sum(x["violations"] for x in legs) if legs else None)
+    out["memory.recovery_depth_ratio (<=1.5)"] = mem.get(
+        "recovery", {}).get("depth_ratio")
+    out["memory.oom_makespan_ratio (<=2)"] = mem.get(
+        "oom", {}).get("makespan_ratio")
     return out
 
 
@@ -144,9 +188,16 @@ def print_table(smoke: dict) -> None:
     the last committed trajectory entries (``-`` where untracked)."""
     chaos_prior = _last_entry(CHAOS_TRAJECTORY)
     linalg_prior = _last_entry(LINALG_TRAJECTORY)
+    memory_prior = _last_entry(MEMORY_TRAJECTORY)
     prior_of = {
         "chaos.makespan_ratio (<=1.5)": chaos_prior.get("makespan_ratio"),
         "chaos.identical (=1)": chaos_prior.get("identical"),
+        "memory.gc_peak_ratio (>1)": memory_prior.get("gc_peak_ratio"),
+        "memory.budget_violations (=0)": memory_prior.get("budget_violations"),
+        "memory.recovery_depth_ratio (<=1.5)":
+            memory_prior.get("recovery_depth_ratio"),
+        "memory.oom_makespan_ratio (<=2)":
+            memory_prior.get("oom_makespan_ratio"),
     }
     for op in LINALG_RATIO_MAX:
         prior_of[f"linalg.{op}.comm_ratio (<={LINALG_RATIO_MAX[op]})"] = \
@@ -174,7 +225,8 @@ def main(argv: list) -> int:
     with open(path) as f:
         data = json.load(f)
     smoke = data.get("smoke_result", data)
-    for section in ("plan_cache", "reshard", "backend", "chaos", "linalg"):
+    for section in ("plan_cache", "reshard", "backend", "chaos", "linalg",
+                    "memory"):
         if section in smoke:
             print(json.dumps({section: smoke[section]}, indent=2,
                              default=float))

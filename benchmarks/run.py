@@ -27,6 +27,7 @@ from . import (
     bench_dgemm,
     bench_linalg,
     bench_logreg,
+    bench_memory,
     bench_micro,
     bench_overhead,
     bench_qr,
@@ -49,6 +50,7 @@ SUITES = {
     "serving": bench_serving,    # beyond-paper: continuous batching
     "roofline": bench_roofline,  # §Roofline (reads dry-run artifact)
     "chaos": bench_chaos,        # beyond-paper: fault-injection robustness
+    "memory": bench_memory,      # beyond-paper: budgets + bounded recovery
 }
 
 
@@ -115,6 +117,13 @@ def main() -> None:
               f"retries={ch['chaos_retries']} "
               f"replayed={ch['chaos_blocks_replayed']} "
               f"spec_wins={ch['chaos_spec_wins']}", flush=True)
+        mem = smoke["memory"]
+        print(f"# smoke memory gc_peak_ratio={mem['gc']['gc_peak_ratio']:.2f} "
+              f"budget_violations="
+              f"{sum(x.get('violations', 0) for x in mem['budget'].values())} "
+              f"recovery_depth_ratio={mem['recovery']['depth_ratio']:.2f} "
+              f"oom_ratio={mem['oom']['makespan_ratio']:.3f} "
+              f"oom_events={mem['oom']['mem_oom_events']}", flush=True)
         if args.json:
             _write_json(args.json, {**meta, "smoke_result": smoke})
         print(f"# total {time.time() - t0:.1f}s", flush=True)

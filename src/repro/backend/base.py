@@ -92,6 +92,18 @@ class BlockBackend:
         async runtimes override — the readiness barrier behind
         ``GraphArray.wait``)."""
 
+    # -- spill channel -------------------------------------------------------
+    # Memory-budgeted eviction moves block values to a host-side store and
+    # back through the same from_host/to_host paths (counted as d2h/h2d so
+    # the host-transfer regression test keeps seeing the hot path clean).
+    def spill_out(self, value) -> np.ndarray:
+        """Evict a backend-resident block value to a host numpy array."""
+        return self.to_host(value)
+
+    def spill_in(self, host: np.ndarray, placement: Tuple[int, int]):
+        """Fault a spilled host array back into backend storage."""
+        return self.from_host(host, placement)
+
     # -- introspection -------------------------------------------------------
     @property
     def compile_cache(self) -> Optional[CompileCache]:

@@ -88,6 +88,14 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def load_npz(path: str) -> Dict[str, np.ndarray]:
+    """Load one checkpoint archive as a flat {key: host array} dict — the
+    block-granular read path behind ``create:restore`` lineage roots (the
+    executor caches the opened archive per path)."""
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
 def restore(ckpt_dir: str, step: Optional[int] = None) -> Tuple[Any, Dict]:
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:

@@ -13,6 +13,7 @@ from .executor import Executor
 from .fusion import fuse_graph
 from .graph_array import GraphArray, einsum, matmul, tensordot
 from .grid import ArrayGrid, auto_grid
+from .memory import MemoryManager, MemStats
 from .layout import (
     ClusterSpec,
     HierarchicalLayout,
@@ -42,6 +43,8 @@ __all__ = [
     "GraphArray",
     "HierarchicalLayout",
     "LSHS",
+    "MemStats",
+    "MemoryManager",
     "NodeGrid",
     "PlacementPlan",
     "PlanCache",

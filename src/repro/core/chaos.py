@@ -82,7 +82,15 @@ class ChaosPlan:
     ``transient_fault_prob`` is the per-dispatch probability that an op
     attempt fails transiently; ``link_degradation`` (>= 1) multiplies every
     transfer time; ``speculation``/``spec_threshold`` control live
-    speculative re-execution of projected stragglers."""
+    speculative re-execution of projected stragglers.
+
+    ``oom_events`` are ``(node, time, capacity_factor)`` triples: at chaos
+    time *t* the node's memory budget shrinks to ``factor`` × its current
+    capacity (factor in (0, 1]) and the MemoryManager evicts down to the low
+    watermark of the new budget.  ``correlated_failures`` are
+    ``(time, (nodes...))`` groups — a rack/AZ-style blast radius: when any
+    member dies, the whole group is killed in the same recovery pass and
+    their blocks are replayed together from the last checkpoint frontier."""
 
     node_failures: Tuple[Tuple[int, float], ...] = ()
     stragglers: Tuple[Tuple[int, float], ...] = ()
@@ -90,6 +98,8 @@ class ChaosPlan:
     link_degradation: float = 1.0
     speculation: bool = True
     spec_threshold: float = 1.5
+    oom_events: Tuple[Tuple[int, float, float], ...] = ()
+    correlated_failures: Tuple[Tuple[float, Tuple[int, ...]], ...] = ()
 
     def __post_init__(self):
         object.__setattr__(self, "node_failures", _pairs(self.node_failures))
@@ -98,6 +108,27 @@ class ChaosPlan:
             raise ValueError("straggler slowdown factors must be >= 1")
         if self.link_degradation < 1.0:
             raise ValueError("link_degradation must be >= 1")
+        ooms = tuple(sorted((int(n), float(t), float(f))
+                            for n, t, f in self.oom_events))
+        if any(not 0.0 < f <= 1.0 for _n, _t, f in ooms):
+            raise ValueError("oom capacity_factor must be in (0, 1]")
+        object.__setattr__(self, "oom_events", ooms)
+        groups = tuple(sorted((float(t), tuple(sorted(int(n) for n in grp)))
+                              for t, grp in self.correlated_failures))
+        object.__setattr__(self, "correlated_failures", groups)
+        if groups:
+            # a correlated group is sugar over node_failures: every member
+            # gets a failure entry at the group time (earliest entry wins,
+            # so explicit per-node times can pre-empt the group)
+            merged = dict(self.node_failures)
+            for t, grp in groups:
+                for n in grp:
+                    merged[n] = min(merged.get(n, t), t)
+            object.__setattr__(self, "node_failures", _pairs(merged))
+
+    @property
+    def failure_groups(self) -> Tuple[Tuple[int, ...], ...]:
+        return tuple(grp for _t, grp in self.correlated_failures)
 
     @property
     def failures(self) -> Dict[int, float]:
@@ -121,6 +152,8 @@ class ChaosStats:
     blocks_lost: int = 0
     blocks_replayed: int = 0    # lineage replays charged to survivors
     rerouted_ops: int = 0       # queued ops moved off a dead node
+    oom_events: int = 0         # budget-shrink events fired
+    oom_evicted: int = 0        # blocks evicted (spill or drop) by OOMs
 
     def as_dict(self) -> Dict[str, float]:
         return {"chaos_" + k: v for k, v in self.__dict__.items()}
@@ -153,6 +186,9 @@ class ChaosEngine:
         self.clocks: Optional[WorkerClocks] = None
         self.dead: Set[int] = set()
         self._fail_at: Dict[int, float] = plan.failures
+        # pending OOM injections, ascending by time: (time, node, factor)
+        self._oom_pending: List[Tuple[float, int, float]] = sorted(
+            (t, n, f) for n, t, f in plan.oom_events)
         # chaos-side residency: obj -> surviving nodes holding a copy
         self.resident: Dict[int, Set[int]] = {}
         # where an op actually ran when chaos moved it (spec win, re-route,
@@ -182,8 +218,19 @@ class ChaosEngine:
             raise ValueError(
                 "node_failures require pipeline=True: death is triggered by "
                 "the live drain (sync dispatch has no in-flight window)")
+        if self.plan.oom_events and not ctx.pipeline:
+            raise ValueError(
+                "oom_events require pipeline=True: budget shrinks fire on "
+                "the live drain's chaos clock")
+        if self.plan.oom_events and not ctx.executor.memory.enabled:
+            raise ValueError(
+                "oom_events need an active MemoryManager: construct the "
+                "ArrayContext with mem_capacity=... or gc=True")
         k = ctx.state.k
-        for n in list(self._fail_at) + [n for n, _f in self.plan.stragglers]:
+        named = (list(self._fail_at)
+                 + [n for n, _f in self.plan.stragglers]
+                 + [n for n, _t, _f in self.plan.oom_events])
+        for n in named:
             if not 0 <= n < k:
                 raise ValueError(
                     f"chaos plan names node {n} outside the {k}-node cluster")
@@ -339,7 +386,37 @@ class ChaosEngine:
         node = chaos_placement(self.state, self, op, cands)
         return node, self.pick_worker(node)
 
+    # -- OOM injection ------------------------------------------------------
+    def apply_ooms(self, now: float) -> None:
+        """Fire every pending OOM event whose time has passed: shrink the
+        node's budget through the MemoryManager (evicting down to the low
+        watermark of the new budget) and charge the eviction stall to the
+        node's chaos clocks."""
+        while self._oom_pending and self._oom_pending[0][0] <= now:
+            _t, node, factor = self._oom_pending.pop(0)
+            if node in self.dead:
+                continue
+            mm = self.executor.memory
+            before = mm.stats.spills + mm.stats.recompute_drops
+            mm.oom(node, factor)
+            self.stats.oom_events += 1
+            self.stats.oom_evicted += (
+                mm.stats.spills + mm.stats.recompute_drops - before)
+            # the eviction storm is local d2h write-back (stats-only); any
+            # nested fault-in pauses every worker on the node
+            busy_s, _net_s = mm.drain_stalls()
+            if busy_s:
+                self.clocks.busy[node, :] += busy_s
+
     # -- node death ---------------------------------------------------------
+    def failure_group(self, node: int) -> Set[int]:
+        """Blast radius of ``node``'s death: its correlated-failure group if
+        it belongs to one, else just itself."""
+        for grp in self.plan.failure_groups:
+            if node in grp:
+                return set(grp)
+        return {node}
+
     def pending_failure(self, node: int, t: float) -> bool:
         ft = self._fail_at.get(node)
         return node not in self.dead and ft is not None and t >= ft

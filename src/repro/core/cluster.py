@@ -266,6 +266,14 @@ class ClusterState:
         # influencing scheduling (clones never fire it: what-if simulations
         # are not real transitions)
         self.transition_hook = None
+        # optional per-node memory budget in elements (core.memory enforces
+        # it at the executor layer; recorded here for reporting only — the
+        # scheduling objective is deliberately budget-blind so budgeted and
+        # unbudgeted runs place identically)
+        self.mem_capacity: Optional[float] = None
+
+    def set_mem_capacity(self, capacity: Optional[float]) -> None:
+        self.mem_capacity = capacity
 
     # -- bookkeeping -------------------------------------------------------
     def clone(self) -> "ClusterState":
@@ -521,6 +529,12 @@ class ClusterState:
     def summary(self) -> Dict[str, float]:
         mk_sync = self.makespan(pipeline=False)
         mk_pipe = self.makespan(pipeline=True)
+        if self.mem_capacity is not None:
+            return {**self._summary_base(mk_sync, mk_pipe),
+                    "mem_capacity_per_node": float(self.mem_capacity)}
+        return self._summary_base(mk_sync, mk_pipe)
+
+    def _summary_base(self, mk_sync: float, mk_pipe: float) -> Dict[str, float]:
         return {
             "max_mem": float(self.S[:, MEM].max()),
             "max_net_in": float(self.S[:, NET_IN].max()),

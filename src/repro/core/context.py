@@ -51,6 +51,9 @@ class ArrayContext:
         plan_cache: Union[bool, PlanCache] = False,
         auto_layout: bool = False,
         dtype: Optional[str] = None,
+        mem_capacity: Optional[float] = None,
+        gc: Optional[bool] = None,
+        mem_watermarks: Tuple[float, float] = (0.9, 0.75),
     ):
         # backend: the block-kernel execution substrate (``repro.backend``):
         # "numpy" (reference interpreter), "jax" (compiled, device-resident),
@@ -81,6 +84,21 @@ class ArrayContext:
         self.executor = Executor(mode=backend, seed=seed, pipeline=pipeline,
                                  dtype=dtype)
         self.dtype = self.executor.dtype
+        # memory-budgeted runtime (core.memory): ``mem_capacity`` is a
+        # per-node budget in elements; ``gc`` enables refcount block freeing
+        # (defaults on whenever a budget is set).  Residency is enforced at
+        # the executor layer only — never folded into the scheduling state or
+        # the plan-cache config signature — so budgeted runs produce
+        # bit-identical outputs to unbudgeted ones.
+        if gc is None:
+            gc = mem_capacity is not None
+        self.executor.memory.configure(
+            cluster.num_nodes, capacity=mem_capacity, gc=gc,
+            high=mem_watermarks[0], low=mem_watermarks[1],
+            cost_model=self.state.cost_model,
+        )
+        self.state.set_mem_capacity(mem_capacity)
+        self._ckpt_seq = 0
         self.scheduler = (
             scheduler
             if isinstance(scheduler, SchedulerBase)
@@ -147,6 +165,7 @@ class ArrayContext:
                 seed=self._seed * 1_000_003 + self._create_counter,
             )
             self.state.add_object(v.vid, node, worker, int(np.prod(bshape)))
+            self.executor.note_handle(v)
             blocks[idx if agrid.grid else ()] = v
         return GraphArray(self, agrid, blocks, node_grid=ng)
 
@@ -242,6 +261,121 @@ class ArrayContext:
             v.meta["dest"] = node
             stack.extend(v.children)
 
+    # -- lineage checkpointing (bounded recovery) -------------------------------
+    def checkpoint(self, arrays: Sequence[GraphArray], dir: str,
+                   step: Optional[int] = None, keep: int = 3) -> str:
+        """Snapshot the live blocks of ``arrays`` through the atomic
+        ``repro.checkpoint`` staging machinery and rewrite their lineage
+        records to ``create:restore`` roots, truncating replay depth: a node
+        kill after this point replays at most the ops since the last
+        checkpoint, not the whole history back to ``create:`` roots.
+        Returns the published checkpoint directory."""
+        from repro.checkpoint import ckpt as _ckpt
+
+        from .executor import OpRecord
+
+        ex = self.executor
+        if ex.mode == "sim":
+            raise RuntimeError("sim executor holds no data to checkpoint")
+        arrays = list(arrays)
+        for ga in arrays:
+            self.compute(ga)
+        ex.flush()
+        state: Dict[str, np.ndarray] = {}
+        metas = []
+        for ga in arrays:
+            blocks = []
+            for idx in ga.grid.iter_indices():
+                v = ga.block(idx)
+                rv = ex.resolve(v.vid)
+                key = f"b{rv}"
+                if key not in state:
+                    state[key] = ex.backend.to_host(ex.get(rv))
+                blocks.append({"index": list(idx), "key": key,
+                               "placement": list(v.placement),
+                               "shape": list(v.shape)})
+            metas.append({"shape": list(ga.shape), "grid": list(ga.grid.grid),
+                          "dtype": ga.grid.dtype, "blocks": blocks})
+        if step is None:
+            step = self._ckpt_seq
+        self._ckpt_seq = step + 1
+        meta = {
+            "arrays": metas,
+            "cluster": [self.cluster.num_nodes,
+                        self.cluster.workers_per_node],
+            "node_grid": list(self.node_grid.dims),
+            "backend": self.backend,
+            "dtype": self.dtype,
+            "seed": self._seed,
+            "pipeline": self.pipeline,
+            "scheduler": self.scheduler.name,
+        }
+        final = _ckpt.save(dir, step, state, meta=meta, keep=keep)
+        npz = os.path.join(final, "state.npz")
+        # lineage rewrite: checkpointed blocks become restore roots — replay
+        # reloads their bits from the archive instead of recursing deeper
+        for ga in arrays:
+            for idx in ga.grid.iter_indices():
+                v = ga.block(idx)
+                rv = ex.resolve(v.vid)
+                ex.lineage[rv] = OpRecord(
+                    rv, "create:restore",
+                    {"seed": None, "value": None,
+                     "path": npz, "key": f"b{rv}"},
+                    (), tuple(v.placement),
+                )
+        mm = ex.memory
+        mm.stats.checkpoints += 1
+        mm.stats.checkpoint_blocks += len(state)
+        mm._ckpt_cache[npz] = dict(state)
+        return final
+
+    @classmethod
+    def restore(cls, dir: str, step: Optional[int] = None,
+                **overrides) -> Tuple["ArrayContext", list]:
+        """Rebuild a context and its checkpointed arrays after simulated
+        driver loss: a fresh ``ArrayContext`` (configuration from the
+        checkpoint's meta, overridable) whose arrays materialize from
+        ``create:restore`` roots — bitwise the blocks that were saved.
+        Returns ``(ctx, arrays)`` in the order given to ``checkpoint``."""
+        from repro.checkpoint import ckpt as _ckpt
+
+        state, meta = _ckpt.restore(dir, step)
+        npz = os.path.join(dir, f"step_{meta['step']:08d}", "state.npz")
+        k, w = meta["cluster"]
+        kwargs = {
+            "cluster": ClusterSpec(k, w),
+            "node_grid": tuple(meta["node_grid"]),
+            "backend": meta["backend"],
+            "dtype": meta["dtype"],
+            "seed": meta["seed"],
+            "pipeline": meta["pipeline"],
+            "scheduler": meta["scheduler"],
+        }
+        kwargs.update(overrides)
+        ctx = cls(**kwargs)
+        # prime the archive cache with the blocks restore() already read
+        ctx.executor.memory._ckpt_cache[npz] = dict(state)
+        arrays = []
+        for am in meta["arrays"]:
+            agrid = ArrayGrid(tuple(am["shape"]), tuple(am["grid"]),
+                              am["dtype"])
+            blocks = np.empty(agrid.grid if agrid.grid else (), dtype=object)
+            for bm in am["blocks"]:
+                idx = tuple(bm["index"])
+                node, worker = bm["placement"]
+                v = leaf(tuple(bm["shape"]), node, worker)
+                ctx.executor.create(
+                    v.vid, tuple(bm["shape"]), (node, worker),
+                    kind="restore", ckpt=(npz, bm["key"]),
+                )
+                ctx.state.add_object(v.vid, node, worker,
+                                     int(np.prod(bm["shape"])))
+                ctx.executor.note_handle(v)
+                blocks[idx if agrid.grid else ()] = v
+            arrays.append(GraphArray(ctx, agrid, blocks, node_grid=None))
+        return ctx, arrays
+
     # -- chaos runtime ----------------------------------------------------------
     def enable_chaos(self, plan, seed: int = 0, retry=None):
         """Attach a seeded fault-injection engine (``core.chaos``) to this
@@ -286,6 +420,9 @@ class ArrayContext:
         if be is not None:
             d.update(be.counters())
             self.sched_stats.note_backend(be)
+        # memory-budget accounting: watermarks, peaks, GC/spill/backpressure
+        self.sched_stats.note_memory(self.executor.memory)
+        d.update(self.sched_stats.mem)
         if self.chaos_engine is not None:
             d.update(self.chaos_engine.summary())
         return d
@@ -299,4 +436,5 @@ class ArrayContext:
         self.executor.stats.reset()
         if self.executor.backend is not None:
             self.executor.backend.stats.reset()
+        self.executor.memory.stats.reset()
         self.sched_stats.reset()

@@ -50,6 +50,7 @@ from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .graph_array import GraphArray, infer_shape
+from .memory import MemoryManager
 
 _MODES = ("numpy", "sim", "jax", "pallas")
 
@@ -139,6 +140,15 @@ class Executor:
 
             self.backend = make_backend(mode, dtype=dtype, devices=devices)
             self.dtype = self.backend.dtype
+        # block residency manager: peak accounting always on; refcount GC,
+        # spill/recompute eviction and per-node budgets activate via
+        # ``memory.configure`` (ArrayContext's gc/mem_capacity parameters)
+        self.memory = MemoryManager(self)
+
+    def note_handle(self, vertex) -> None:
+        """Register a live Vertex leaf as a reachability root for its block
+        (refcount GC); no-op unless the memory manager is enabled."""
+        self.memory.note_handle(vertex)
 
     # -- creation ---------------------------------------------------------
     def create(
@@ -149,17 +159,22 @@ class Executor:
         kind: str = "zeros",
         value: Optional[np.ndarray] = None,
         seed: Optional[int] = None,
+        ckpt: Optional[Tuple[str, str]] = None,
     ) -> None:
         self.stats.n_creates += 1
         self.stats.n_rfc += 1
         self.shapes[vid] = tuple(shape)
         self.block_home[vid] = placement
-        self.lineage[vid] = OpRecord(
-            vid, f"create:{kind}", {"seed": seed, "value": value}, (), placement
-        )
+        meta: Dict[str, Any] = {"seed": seed, "value": value}
+        if ckpt is not None:
+            meta["path"], meta["key"] = ckpt
+        self.lineage[vid] = OpRecord(vid, f"create:{kind}", meta, (), placement)
+        elements = int(np.prod(shape)) if shape else 1
         if self.mode == "sim":
             self.store[vid] = None
+            self.memory.on_materialize(vid, placement[0], elements)
             return
+        self.memory.admit(placement[0], elements)
         # block values are generated on the host with numpy for every
         # backend (identical bits), then committed to backend storage once
         if value is not None:
@@ -172,9 +187,14 @@ class Executor:
             arr = np.random.default_rng(seed).standard_normal(shape)
         elif kind == "uniform":
             arr = np.random.default_rng(seed).random(shape)
+        elif kind == "restore":
+            # lineage-checkpoint root: the block's bits come from the atomic
+            # checkpoint archive, truncating any deeper replay
+            arr = self.memory.ckpt_block(meta["path"], meta["key"])
         else:
             raise ValueError(f"unknown creation kind {kind!r}")
         self.store[vid] = self._commit(arr, placement)
+        self.memory.on_materialize(vid, placement[0], elements)
 
     def _commit(self, arr: np.ndarray, placement: Tuple[int, int]):
         return self.backend.from_host(arr, placement)
@@ -189,6 +209,15 @@ class Executor:
         vid = self.resolve(vid)
         if vid in self._pending_ids:
             self.flush()
+        mm = self.memory
+        if mm.enabled and self.mode != "sim":
+            mm._touch(vid)
+            if self.store.get(vid) is None:
+                # transparent fault-in: spilled blocks reload over h2d,
+                # GC-dropped blocks replay from lineage — both bitwise
+                value = mm.revive(vid)
+                if value is not None:
+                    return value
         return self.store[vid]
 
     def run_op(
@@ -215,8 +244,14 @@ class Executor:
         self.shapes[out_id] = out_shape
         if self.mode == "sim":
             self.store[out_id] = None
+            self.memory.on_materialize(out_id, placement[0],
+                                       int(np.prod(out_shape)) if out_shape
+                                       else 1)
             self.stats.dispatch_s += perf_counter() - t0
             return
+        # refcount GC: each dispatched consumer pins its operands until it
+        # retires (unpinned in _execute) — a pinned block is never evicted
+        self.memory.pin(in_ids)
         # chaos: transient-fault attempts are drawn at dispatch time, so the
         # seeded sequence is a function of the schedule alone — drain order,
         # speculation and replay never shift which op draws which faults
@@ -251,14 +286,25 @@ class Executor:
         meta: Dict[str, Any],
         in_ids: Sequence[int],
         placement: Tuple[int, int],
-    ) -> None:
+    ) -> float:
+        # memory gate first: over the high watermark the drain stalls here
+        # (backpressure) while victims spill/drop, before the op materializes
+        out_shape = self.shapes[out_id]
+        out_elements = int(np.prod(out_shape)) if out_shape else 1
+        stall = self.memory.admit(
+            placement[0], out_elements,
+            protect=tuple(self.resolve(i) for i in in_ids))
         # operands flow to the backend in their resident representation
         # (numpy arrays / jax device arrays) — no host round-trip here
         ins = [self.get(i) for i in in_ids]
         out = self.backend.execute(op, meta, ins, placement)
-        out_shape = self.shapes[out_id]
-        self.stats.elements_computed += int(np.prod(out_shape)) if out_shape else 1
+        self.stats.elements_computed += out_elements
         self.store[out_id] = out
+        self.memory.on_materialize(out_id, placement[0], out_elements)
+        self.memory.unpin(in_ids)
+        if self.chaos is None:
+            self.memory.drain_stalls()  # stats keep them; nominal clocks don't
+        return stall
 
     def pending_count(self) -> int:
         return len(self._pending_ids)
@@ -351,14 +397,25 @@ class Executor:
         eng.charge(head, node, worker)
         self._execute(head.out_id, head.op, head.meta, head.in_ids,
                       (node, worker))
+        # backpressure lands on the chaos clock track only (nominal tracks
+        # never move, so scheduling stays unperturbed): a fault-in blocks
+        # this worker until the h2d completes; spill write-backs are
+        # fire-and-forget local d2h (no link contention, stats-only)
+        busy_s, _net_s = self.memory.drain_stalls()
+        if busy_s:
+            eng.clocks.busy[node, worker] += busy_s
 
     def _kill_and_replay(self, node: int) -> None:
         """A node died mid-drain: drop its blocks (object-store loss), then
         eagerly replay every lost block from lineage on surviving nodes —
         queued ops depending on them must find operands materialized when
         they retire.  Replay placement and clock charges go through the
-        chaos engine."""
-        lost = self.chaos.kill_node(node)
+        chaos engine.  A *correlated* failure (rack loss) takes the whole
+        group down first, so no replay lands on a doomed group member."""
+        lost: List[int] = []
+        for n in sorted(self.chaos.failure_group(node)):
+            if n not in self.chaos.dead:
+                lost.extend(self.chaos.kill_node(n))
         if lost:
             self.recover(lost, _flush=False)
 
@@ -427,6 +484,9 @@ class Executor:
             i = min(range(len(heads)), key=lambda j: (projs[j], heads[j][1].seq))
             qkey, head = heads[i]
             tgt = eng.spec_target.get(head.out_id) or head.placement
+            # OOM injections scheduled before this op's start fire first:
+            # the node's budget shrinks and eviction runs under backpressure
+            eng.apply_ooms(eng.projected_start(head, placement=tgt))
             if eng.pending_failure(tgt[0], eng.projected_start(head,
                                                                placement=tgt)):
                 self._kill_and_replay(tgt[0])
@@ -438,8 +498,9 @@ class Executor:
             if self.retire_log is not None:
                 self.retire_log.append(head.out_id)
             executed += 1
-        # end-of-drain sweep: a failure timed inside this drain's makespan
-        # fires even if no op ever started on the node after t
+        # end-of-drain sweeps: OOMs and failures timed inside this drain's
+        # makespan fire even if no op ever started on the node after t
+        eng.apply_ooms(eng.clocks.makespan())
         for node, t in eng._fail_at.items():
             if (node not in eng.dead and node < eng.clocks.k
                     and t <= eng.clocks.makespan()):
@@ -482,6 +543,7 @@ class Executor:
         ]
         for vid in lost:
             self.store[vid] = None
+            self.memory.on_lost(vid)
         return lost
 
     def fail_node(self, node: int) -> List[int]:
@@ -507,37 +569,93 @@ class Executor:
         if _flush:
             self.flush()
         eng = self.chaos
+        mm = self.memory
         replayed = 0
 
-        def ensure(vid: int) -> None:
+        def retire(vid: int, placement: Tuple[int, int], rec: OpRecord) -> None:
             nonlocal replayed
-            vid = self.resolve(vid)
-            if self.store.get(vid) is not None:
-                return
-            rec = self.lineage[vid]
-            placement = rec.placement if eng is None else eng.replay_placement(rec)
-            if rec.op.startswith("create:"):
-                kind = rec.op.split(":", 1)[1]
-                self.store.pop(vid, None)
-                self.create(
-                    vid, self.shapes[vid], placement, kind,
-                    value=rec.meta.get("value"), seed=rec.meta.get("seed"),
-                )
-            else:
-                for i in rec.in_ids:
-                    ensure(i)
-                # operands come straight from the store: ensure() has just
-                # materialized them, and get() must not re-enter flush when
-                # the chaos drain replays mid-flush
-                ins = [self.store[self.resolve(i)] for i in rec.in_ids]
-                self.store[vid] = self.backend.execute(rec.op, rec.meta, ins,
-                                                       placement)
             replayed += 1
             if self.backend is not None:
                 self.backend.stats.replays += 1
             if eng is not None:
                 eng.note_replayed(vid, placement, rec)
 
-        for vid in vids:
-            ensure(vid)
+        # iterative post-order worklist (the recursive ensure() overflowed
+        # Python's stack on deep Newton/CP-ALS lineage chains): entries are
+        # (vid, expanded); children push in reversed order so replay order —
+        # and every stat/clock charge — matches the old recursion exactly.
+        # Frees are deferred until the worklist completes: a replayed
+        # intermediate shared by several lost consumers must survive all of
+        # them, or each would replay it again (exponential blowup).
+        mm._defer_free += 1
+        try:
+            self._recover_worklist(vids, eng, mm, retire)
+        finally:
+            mm._defer_free -= 1
+            if mm._defer_free == 0:
+                mm.flush_deferred()
         return replayed
+
+    def _recover_worklist(self, vids, eng, mm, retire) -> None:
+        def charge_mm(node: int) -> None:
+            busy_s, _net_s = mm.drain_stalls()
+            if eng is None:
+                return  # stats keep the stall; nominal clocks never move
+            if busy_s:
+                eng.clocks.busy[node, eng.pick_worker(node)] += busy_s
+
+        stack: List[Tuple[int, bool]] = [
+            (v, False) for v in reversed([self.resolve(v) for v in vids])
+        ]
+        while stack:
+            vid, expanded = stack.pop()
+            if not expanded:
+                vid = self.resolve(vid)
+                if self.store.get(vid) is not None:
+                    continue
+                if mm.is_spilled(vid):
+                    # spilled, not lost: the host-side copy survives node
+                    # death — fault it in instead of replaying the lineage
+                    mm.fault_in(vid)
+                    charge_mm(mm.node_of.get(vid, 0))
+                    continue
+                rec = self.lineage[vid]
+                placement = (rec.placement if eng is None
+                             else eng.replay_placement(rec))
+                if rec.op.startswith("create:"):
+                    kind = rec.op.split(":", 1)[1]
+                    ckpt = ((rec.meta["path"], rec.meta["key"])
+                            if "path" in rec.meta else None)
+                    self.store.pop(vid, None)
+                    self.create(
+                        vid, self.shapes[vid], placement, kind,
+                        value=rec.meta.get("value"),
+                        seed=rec.meta.get("seed"), ckpt=ckpt,
+                    )
+                    retire(vid, placement, rec)
+                    continue
+                stack.append((vid, True))
+                # recovery-pin the pending replay's operands: the worklist
+                # reads the store directly, so neither GC nor eviction may
+                # reclaim them between materialization and use
+                mm.pin(rec.in_ids, rec=True)
+                for i in reversed(rec.in_ids):
+                    stack.append((self.resolve(i), False))
+                continue
+            rec = self.lineage[vid]
+            placement = (rec.placement if eng is None
+                         else eng.replay_placement(rec))
+            # operands come straight from the store: the worklist has just
+            # materialized them, and get() must not re-enter flush when
+            # the chaos drain replays mid-flush
+            ins = [self.store[self.resolve(i)] for i in rec.in_ids]
+            out_shape = self.shapes[vid]
+            mm.admit(placement[0], int(np.prod(out_shape)) if out_shape else 1,
+                     protect=tuple(self.resolve(i) for i in rec.in_ids))
+            self.store[vid] = self.backend.execute(rec.op, rec.meta, ins,
+                                                   placement)
+            mm.on_materialize(vid, placement[0],
+                              int(np.prod(out_shape)) if out_shape else 1)
+            mm.unpin(rec.in_ids, rec=True)
+            charge_mm(placement[0])
+            retire(vid, placement, rec)

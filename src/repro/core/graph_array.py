@@ -33,7 +33,7 @@ def _next_id() -> int:
 
 class Vertex:
     __slots__ = ("vid", "kind", "op", "shape", "children", "meta", "placement",
-                 "parents", "ftok")
+                 "parents", "ftok", "__weakref__")
 
     def __init__(
         self,
@@ -69,6 +69,18 @@ class Vertex:
     def to_leaf(self, node: int, worker: int) -> None:
         """In-place conversion of an op/reduce vertex into a leaf (LSHS
         transition): parents see the result without pointer surgery."""
+        # unlink this vertex from its children's parent back-references:
+        # child.parents otherwise keeps every past consumer alive (and with
+        # it the consumer's whole subgraph), so iterative workloads leaked
+        # one graph per iteration through loop-invariant leaves.  The wake
+        # machinery reads self.parents (untouched here); a child's parents
+        # list only matters while that child can still transition, and a
+        # dispatched consumer never needs waking again.
+        for c in self.children:
+            try:
+                c.parents.remove(self)
+            except ValueError:
+                pass
         self.kind = "leaf"
         self.op = ""
         self.children = []

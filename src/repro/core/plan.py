@@ -338,6 +338,7 @@ def replay_plan(plan: PlacementPlan, verts: List[Vertex], state, executor,
             executor.alias(v.vid, src_vid)
             state.add_object(v.vid, pl[0], pl[1], elements, ready_of=src_vid)
             v.to_leaf(pl[0], pl[1])
+            executor.note_handle(v)
             continue
         in_vids = [vid_of[c] for c in in_cids]
         t0 = perf_counter()
@@ -346,6 +347,10 @@ def replay_plan(plan: PlacementPlan, verts: List[Vertex], state, executor,
         dispatch_s += perf_counter() - t0
         if v is not None:
             v.to_leaf(pl[0], pl[1])
+            # same reachability root the cold path registers in _dispatch;
+            # replay temporaries have no vertex and free on last-consumer
+            # retire instead
+            executor.note_handle(v)
     if stats is not None:
         stats.dispatch_s += dispatch_s
 
@@ -433,6 +438,10 @@ class SchedStats:
     comm_moved: Dict[str, float] = field(default_factory=dict)
     comm_lower: Dict[str, float] = field(default_factory=dict)
     comm_ratios: Dict[str, float] = field(default_factory=dict)
+    # memory-budget accounting (``core.memory``): the manager's snapshot —
+    # watermarks, per-node peak residency, GC/spill/backpressure counters —
+    # refreshed by ``note_memory`` (``ArrayContext.loads`` calls it)
+    mem: Dict[str, float] = field(default_factory=dict)
 
     def note_comm(self, op: str, moved_elements: float,
                   lower_elements: float) -> None:
@@ -444,6 +453,10 @@ class SchedStats:
         self.comm_moved[op] = self.comm_moved.get(op, 0.0) + float(moved_elements)
         self.comm_lower[op] = self.comm_lower.get(op, 0.0) + float(lower_elements)
         self.comm_ratios[op] = comm_ratio(self.comm_moved[op], self.comm_lower[op])
+
+    def note_memory(self, manager) -> None:
+        """Refresh the memory-budget counters from a ``MemoryManager``."""
+        self.mem = manager.snapshot()
 
     def note_backend(self, backend) -> None:
         """Refresh the backend compile counters from a ``BlockBackend``."""
@@ -492,6 +505,7 @@ class SchedStats:
             out[f"comm_moved_{op}"] = self.comm_moved[op]
             out[f"comm_lower_{op}"] = self.comm_lower[op]
             out[f"comm_ratio_{op}"] = self.comm_ratios[op]
+        out.update(self.mem)
         return out
 
     def reset(self) -> None:
@@ -508,3 +522,4 @@ class SchedStats:
         self.comm_moved.clear()
         self.comm_lower.clear()
         self.comm_ratios.clear()
+        self.mem = {}

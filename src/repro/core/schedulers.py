@@ -136,6 +136,9 @@ class SchedulerBase:
         t0 = perf_counter() if stats is not None else 0.0
         eta = state.transition(node, v.vid, v.elements, in_ids, worker=worker)
         executor.run_op(v.vid, v.op, v.meta, in_ids, (node, worker), eta=eta)
+        # the vertex object is the reachability root for its block: while any
+        # leaf referencing the vid is alive the block stays resident (GC)
+        executor.note_handle(v)
         if stats is not None:
             stats.dispatch_s += perf_counter() - t0
         return node, worker
@@ -212,6 +215,7 @@ class SchedulerBase:
             if recorder is not None:
                 recorder.aliased(v, only)
             v.to_leaf(*only.placement)
+            executor.note_handle(v)
 
     def _finalize_reduce(self, v, forced, state, executor, rng, recorder=None, stats=None) -> None:
         if len(v.children) == 1:
@@ -222,6 +226,7 @@ class SchedulerBase:
             if recorder is not None:
                 recorder.aliased(v, only)
             v.to_leaf(*only.placement)
+            executor.note_handle(v)
             return
         if v.vid in forced:
             node, worker = forced[v.vid]

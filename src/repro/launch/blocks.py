@@ -7,6 +7,8 @@ per-node loads plus both simulated makespans (the overlap ablation).
     PYTHONPATH=src python -m repro.launch.blocks --workload dgemm --sync
     PYTHONPATH=src python -m repro.launch.blocks --workload logreg \
         --iters 10 --plan-cache
+    PYTHONPATH=src python -m repro.launch.blocks --workload logreg \
+        --iters 10 --backend numpy --gc --mem-capacity 2e5
 
 ``--iters N`` runs the workload as an N-iteration loop (the Newton loop for
 logreg, repeated C = A @ B for dgemm) — the iterative regime where
@@ -94,6 +96,15 @@ def main() -> None:
     ap.add_argument("--auto-layout", dest="auto_layout", action="store_true",
                     help="per-array node grids from default_node_grid "
                          "instead of the context-wide node grid")
+    ap.add_argument("--gc", action="store_true",
+                    help="refcount GC of dead intermediates: frees store "
+                         "entries when the last consumer retires (freed "
+                         "blocks replay from lineage if read late)")
+    ap.add_argument("--mem-capacity", dest="mem_capacity", type=float,
+                    default=None,
+                    help="per-node memory budget in elements: dispatches "
+                         "over the high watermark backpressure and evict "
+                         "(spill-vs-recompute) down to the low watermark")
     group = ap.add_mutually_exclusive_group()
     group.add_argument("--pipeline", dest="pipeline", action="store_true",
                        help="queue ops and drain via the async event loop")
@@ -130,6 +141,8 @@ def main() -> None:
         pipeline=args.pipeline,
         plan_cache=args.plan_cache,
         auto_layout=args.auto_layout,
+        mem_capacity=args.mem_capacity,
+        gc=True if args.gc else None,
     )
     out = build_workload(ctx, args.workload, args.scale, iters=args.iters,
                          reshard_method=args.reshard_method)
@@ -147,6 +160,13 @@ def main() -> None:
 
     ctx.flush()
     report = ctx.loads()
+    if args.gc or args.mem_capacity is not None:
+        print(f"# peak store: {report['mem_peak_store_blocks']:.0f} blocks / "
+              f"{report['mem_peak_store_bytes']:.0f} bytes | gc freed "
+              f"{report['mem_gc_freed_blocks']:.0f} blocks | "
+              f"{report['mem_spills']:.0f} spills, "
+              f"{report['mem_recompute_drops']:.0f} drops, "
+              f"{report['mem_violations']:.0f} budget violations")
     report.update(
         workload=args.workload, scheduler=args.scheduler,
         pipeline=args.pipeline, nodes=args.nodes, workers=args.workers,

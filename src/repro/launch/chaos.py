@@ -5,6 +5,8 @@ traffic — the composed "production story" behind every fault-tolerance claim.
     PYTHONPATH=src python -m repro.launch.chaos --nodes 8 --iters 3 \
         --fail-nodes 1 --stragglers 2 --slowdown 4 --fault-prob 0.02
     PYTHONPATH=src python -m repro.launch.chaos --resize-to 6 --traffic 2
+    PYTHONPATH=src python -m repro.launch.chaos --fail-nodes 2 \
+        --correlated-kill --mem-budget 0.6 --oom-at 0.5 --assert-gate
     PYTHONPATH=src python -m repro.launch.blocks --chaos   # same scenario
 
 Every scenario runs **twice with identical host-side decisions** — once
@@ -61,6 +63,8 @@ def run_scenario(
     resize_to: Optional[int] = None,
     resize_at: Optional[int] = None,
     traffic: int = 0,
+    mem_capacity: Optional[float] = None,
+    gc: bool = False,
 ) -> Dict:
     """One full scenario run under ``plan``: ``iters`` Newton iterations on
     an (n, d) design matrix split over ``2 * nodes`` row blocks, with an
@@ -76,7 +80,8 @@ def run_scenario(
     ctx = ArrayContext(
         cluster=ClusterSpec(nodes, workers), node_grid=(nodes, 1),
         scheduler=scheduler, backend=backend, pipeline=True, seed=seed,
-        plan_cache=plan_cache,
+        plan_cache=plan_cache, mem_capacity=mem_capacity,
+        gc=True if gc else None,
     )
     engine = ctx.enable_chaos(plan, seed=chaos_seed, retry=retry)
     X = ctx.random((n, d), grid=(q, 1))
@@ -121,6 +126,7 @@ def run_scenario(
         "ctx": ctx,
         "chaos_makespan": engine.makespan(),
         "nominal_makespan": ctx.state.makespan(pipeline=True),
+        "memory": ctx.executor.memory.snapshot(),
     }
 
 
@@ -148,6 +154,10 @@ def run_chaos_scenario(
     scheduler: str = "lshs",
     plan_cache: bool = False,
     check_determinism: bool = True,
+    mem_budget: Optional[float] = None,
+    oom_at: Optional[float] = None,
+    oom_factor: float = 0.5,
+    correlated_kill: bool = False,
 ) -> Dict:
     """Fault-free vs chaos comparison on one scenario (module docstring).
 
@@ -158,7 +168,17 @@ def run_chaos_scenario(
     leg, and (optionally) a determinism re-run.  Returns a flat JSON-able
     report — ``identical``, ``deterministic``, ``makespan_ratio`` and the
     chaos counters are the CI gate inputs.
+
+    Memory-bounded variants: ``mem_budget`` caps each node at that fraction
+    of the fault-free *unbudgeted, un-GC'd* leg's peak residency — the
+    budgeted leg turns refcount GC on, so freeing dead intermediates does
+    most of the work and spill/backpressure handles the tail (enforcement
+    never overshoots); ``oom_at`` shrinks node 0's budget to ``oom_factor``
+    × capacity at that fraction of the fault-free makespan;
+    ``correlated_kill`` merges the ``fail_nodes`` deaths into one correlated
+    blast-radius group killed — and recovered — together.
     """
+    use_mem = mem_budget is not None or oom_at is not None
     kw = dict(nodes=nodes, workers=workers, backend=backend, n=n, d=d,
               iters=iters, seed=seed, chaos_seed=chaos_seed,
               scheduler=scheduler, plan_cache=plan_cache,
@@ -169,17 +189,30 @@ def run_chaos_scenario(
     # retry backoff scaled to the workload: first backoff ~ one average op
     retry = RetryPolicy(backoff_base=base_mk / max(
         base["ctx"].executor.stats.n_queued, 1))
+    capacity = None
+    if mem_budget is not None:
+        capacity = max(mem_budget * base["memory"]["mem_peak_live_elements"],
+                       1.0)
+    ooms = ()
+    if oom_at is not None:
+        # node 0 is never in the kill set (deaths take the highest ids)
+        ooms = ((0, oom_at * base_mk, oom_factor),)
     failures = {nodes - 1 - i: fail_at_frac * base_mk for i in range(fail_nodes)}
     slow = {1 + i: slowdown for i in range(stragglers)}
     plan = ChaosPlan(
-        node_failures=tuple(failures.items()),
+        node_failures=() if correlated_kill else tuple(failures.items()),
+        correlated_failures=(((fail_at_frac * base_mk,
+                               tuple(sorted(failures))),)
+                             if correlated_kill and failures else ()),
         stragglers=tuple(slow.items()),
         transient_fault_prob=fault_prob,
         link_degradation=link_degradation,
         speculation=speculation,
         spec_threshold=spec_threshold,
+        oom_events=ooms,
     )
-    chaos = run_scenario(plan, retry=retry, **kw)
+    chaos = run_scenario(plan, retry=retry, mem_capacity=capacity,
+                         gc=use_mem, **kw)
     identical = (
         base["beta"].tobytes() == chaos["beta"].tobytes()
         and base["served"] == chaos["served"]
@@ -187,11 +220,13 @@ def run_chaos_scenario(
     )
     deterministic = True
     if check_determinism:
-        rerun = run_scenario(plan, retry=retry, **kw)
+        rerun = run_scenario(plan, retry=retry, mem_capacity=capacity,
+                             gc=use_mem, **kw)
         deterministic = (
             rerun["chaos_makespan"] == chaos["chaos_makespan"]
             and rerun["engine"].stats == chaos["engine"].stats
             and rerun["beta"].tobytes() == chaos["beta"].tobytes()
+            and rerun["memory"] == chaos["memory"]
         )
     stats = chaos["engine"].stats
     report = {
@@ -209,8 +244,14 @@ def run_chaos_scenario(
         "makespan_nominal_pipelined": chaos["nominal_makespan"],
         "identical": identical,
         "deterministic": deterministic,
+        "mem_budget": mem_budget,
+        "mem_budget_capacity": capacity,
+        "oom_at": oom_at,
+        "oom_factor": oom_factor if oom_at is not None else None,
+        "correlated_kill": bool(correlated_kill),
     }
     report.update(stats.as_dict())
+    report.update(chaos["memory"])
     report["chaos_dead_nodes"] = sorted(chaos["engine"].dead)
     return report
 
@@ -245,9 +286,26 @@ def main() -> None:
     ap.add_argument("--scheduler", default="lshs",
                     choices=("lshs", "lshs+", "roundrobin", "dynamic"))
     ap.add_argument("--plan-cache", dest="plan_cache", action="store_true")
+    ap.add_argument("--mem-budget", dest="mem_budget", type=float,
+                    default=None,
+                    help="per-node budget as a fraction of the fault-free "
+                         "leg's peak residency (e.g. 0.6); enforcement "
+                         "backpressures instead of overshooting")
+    ap.add_argument("--oom-at", dest="oom_at", type=float, default=None,
+                    help="inject an OOM on node 0 at this fraction of the "
+                         "fault-free makespan (budget shrinks to "
+                         "--oom-factor x capacity)")
+    ap.add_argument("--oom-factor", dest="oom_factor", type=float,
+                    default=0.5)
+    ap.add_argument("--correlated-kill", dest="correlated_kill",
+                    action="store_true",
+                    help="kill the --fail-nodes set as one correlated group "
+                         "(rack loss) instead of independent deaths")
     ap.add_argument("--assert-gate", action="store_true",
                     help="exit nonzero unless identical + deterministic and "
-                         "makespan_ratio <= 1.5")
+                         "makespan_ratio <= 1.5 (<= 2.0 with --mem-budget/"
+                         "--oom-at: backpressure stalls are expected), with "
+                         "zero budget violations")
     args = ap.parse_args()
     report = run_chaos_scenario(
         nodes=args.nodes, workers=args.workers, backend=args.backend,
@@ -259,16 +317,23 @@ def main() -> None:
         spec_threshold=args.spec_threshold, resize_to=args.resize_to,
         resize_at=args.resize_at, traffic=args.traffic,
         scheduler=args.scheduler, plan_cache=args.plan_cache,
+        mem_budget=args.mem_budget, oom_at=args.oom_at,
+        oom_factor=args.oom_factor, correlated_kill=args.correlated_kill,
     )
     print(json.dumps(report, indent=2, default=float))
     if args.assert_gate:
+        budgeted = args.mem_budget is not None or args.oom_at is not None
+        limit = 2.0 if budgeted else 1.5
         ok = (report["identical"] and report["deterministic"]
-              and report["makespan_ratio"] <= 1.5)
+              and report["makespan_ratio"] <= limit
+              and (not budgeted or report["mem_violations"] == 0))
         if not ok:
             raise SystemExit("chaos gate FAILED: "
                              f"identical={report['identical']} "
                              f"deterministic={report['deterministic']} "
-                             f"ratio={report['makespan_ratio']:.3f}")
+                             f"ratio={report['makespan_ratio']:.3f} "
+                             f"(limit {limit}) "
+                             f"violations={report['mem_violations']}")
 
 
 if __name__ == "__main__":
