@@ -204,6 +204,8 @@ def smoke() -> dict:
     result["linalg"] = bench_linalg.linalg_smoke()
     from . import bench_memory
     result["memory"] = bench_memory.memory_smoke()
+    from . import bench_trace
+    result["trace"] = bench_trace.trace_smoke()
     return result
 
 

@@ -11,6 +11,11 @@ management, option enumeration, cost simulation, fingerprinting — everything
 the structural plan cache can amortize) vs *dispatch time* (transition +
 run_op, paid on every path), and compares a cached 10-iteration Newton loop
 against a cold one (sim backend: scheduling cost only, no block math).
+
+Pipelined dispatch adds a third wall-clock bucket the dispatch_s split used
+to silently drop: *drain time* (``Executor.flush()`` — queue draining, not
+per-op dispatch).  ``drain_us`` is reported per row and the
+``overhead.dispatch_split.pipelined`` row shows the full three-way split.
 """
 from __future__ import annotations
 
@@ -60,6 +65,33 @@ def run(quick: bool = True) -> None:
         emit(f"overhead.fusion.{'on' if fuse else 'off'}", 0.0, f"rfcs={rfcs}")
 
     plan_cache_comparison(quick=quick)
+    dispatch_split_pipelined(quick=quick)
+
+
+def dispatch_split_pipelined(quick: bool = True, iters: int = 10,
+                             emit_rows: bool = True) -> dict:
+    """The three-way wall-clock split under pipelined dispatch: scheduler
+    time vs per-op dispatch time (run_op) vs queue-drain time (flush).
+    Before drain_s existed the drain wall time vanished from the split —
+    pipelined runs under-reported their control overhead by exactly this
+    bucket."""
+    n, d, q, k, r = ((1 << 15, 32, 64, 16, 4) if quick
+                     else (1 << 16, 64, 128, 16, 8))
+    ctx = ArrayContext(cluster=ClusterSpec(k, r), node_grid=(k, 1),
+                       backend="sim", seed=0, pipeline=True)
+    logreg_newton_loop(ctx, n=n, d=d, q=q, iters=iters)
+    ctx.flush()
+    st = ctx.sched_stats
+    st.note_exec(ctx.executor.stats)
+    row = st.as_dict()
+    if emit_rows:
+        emit("overhead.dispatch_split.pipelined",
+             (row["sched_overhead_s"] + row["dispatch_s"]
+              + row["drain_s"]) * 1e6,
+             f"sched_us={row['sched_overhead_s'] * 1e6:.0f};"
+             f"dispatch_us={row['dispatch_s'] * 1e6:.0f};"
+             f"drain_us={row['drain_s'] * 1e6:.0f}")
+    return row
 
 
 def plan_cache_comparison(quick: bool = True, iters: int = 10,
@@ -85,7 +117,9 @@ def plan_cache_comparison(quick: bool = True, iters: int = 10,
                 ctx = ArrayContext(cluster=ClusterSpec(k, r), node_grid=(k, 1),
                                    backend="sim", seed=0, plan_cache=cache)
                 logreg_newton_loop(ctx, n=n, d=d, q=q, iters=iters)
+                ctx.flush()
                 st = ctx.sched_stats
+                st.note_exec(ctx.executor.stats)  # pick up drain_s
                 if best is None or st.scheduling_overhead_s < best["sched_overhead_s"]:
                     best = st.as_dict()
             out["on" if cache else "off"] = best
@@ -101,6 +135,7 @@ def plan_cache_comparison(quick: bool = True, iters: int = 10,
             emit(f"overhead.plan_cache.{mode}", row["sched_overhead_s"] * 1e6,
                  f"sched_us={row['sched_overhead_s'] * 1e6:.0f};"
                  f"dispatch_us={row['dispatch_s'] * 1e6:.0f};"
+                 f"drain_us={row['drain_s'] * 1e6:.0f};"
                  f"fingerprint_us={row['fingerprint_s'] * 1e6:.0f};"
                  f"hits={row['plan_hits']};misses={row['plan_misses']}")
         emit("overhead.plan_cache.speedup", 0.0,

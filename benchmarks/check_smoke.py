@@ -25,6 +25,10 @@ Gate rationale mirrors the sections it checks:
   bit-identical with zero per-dispatch violations and live evictions,
   checkpointed recovery depth must be k-independent (replay ratio ≤ 1.5),
   and the OOM-backpressure makespan must stay within 2x unbudgeted.
+- trace: the flight recorder must stay near-free — traced/untraced wall
+  ≤ 1.10x with *exactly* equal simulated makespans and bit-identical
+  outputs — and the critical-path decomposition of the traced chaos run
+  must close (sum to 100% ± 1% of the chaos makespan).
 """
 from __future__ import annotations
 
@@ -141,6 +145,25 @@ def check(smoke: dict) -> list:
     except KeyError as e:
         failures.append(f"memory section malformed: missing {e}")
 
+    try:
+        tr = smoke["trace"]
+        gate(tr["overhead_ratio"] <= 1.10,
+             f"tracing overhead exceeds 1.10x untraced wall: {tr}")
+        gate(tr["makespan_sync_equal"] and tr["makespan_pipelined_equal"],
+             f"tracing perturbed the simulated clocks: {tr}")
+        gate(tr["bit_identical"], f"tracing changed output bits: {tr}")
+        gate(tr["dropped"] == 0, f"trace ring dropped events: {tr}")
+        gate(abs(tr["decomposition_total_pct"] - 100.0) <= 1.0,
+             f"critical-path decomposition does not close: {tr}")
+        chz = tr["chaos"]
+        gate(chz["identical"] and chz["deterministic"],
+             f"traced chaos leg broke identity/determinism: {chz}")
+        gate(abs(chz["decomposition_total_pct"] - 100.0) <= 1.0,
+             f"chaos critical-path decomposition does not close: {chz}")
+        gate(chz["top_stall"] != "", f"no dominant stall cause named: {chz}")
+    except KeyError as e:
+        failures.append(f"trace section malformed: missing {e}")
+
     return failures
 
 
@@ -172,6 +195,14 @@ def gated_floors(smoke: dict) -> dict:
         "recovery", {}).get("depth_ratio")
     out["memory.oom_makespan_ratio (<=2)"] = mem.get(
         "oom", {}).get("makespan_ratio")
+    tr = smoke.get("trace", {})
+    out["trace.overhead_ratio (<=1.1)"] = tr.get("overhead_ratio")
+    out["trace.clocks_equal (=1)"] = tr.get("makespan_pipelined_equal")
+    out["trace.bit_identical (=1)"] = tr.get("bit_identical")
+    out["trace.decomposition_pct (100+-1)"] = tr.get(
+        "decomposition_total_pct")
+    out["trace.chaos_decomposition_pct (100+-1)"] = tr.get(
+        "chaos", {}).get("decomposition_total_pct")
     return out
 
 
@@ -226,7 +257,7 @@ def main(argv: list) -> int:
         data = json.load(f)
     smoke = data.get("smoke_result", data)
     for section in ("plan_cache", "reshard", "backend", "chaos", "linalg",
-                    "memory"):
+                    "memory", "trace"):
         if section in smoke:
             print(json.dumps({section: smoke[section]}, indent=2,
                              default=float))

@@ -33,6 +33,7 @@ from . import (
     bench_qr,
     bench_roofline,
     bench_tensor,
+    bench_trace,
     common,
 )
 from .common import header
@@ -51,6 +52,7 @@ SUITES = {
     "roofline": bench_roofline,  # §Roofline (reads dry-run artifact)
     "chaos": bench_chaos,        # beyond-paper: fault-injection robustness
     "memory": bench_memory,      # beyond-paper: budgets + bounded recovery
+    "trace": bench_trace,        # beyond-paper: flight recorder + crit path
 }
 
 
@@ -124,6 +126,13 @@ def main() -> None:
               f"recovery_depth_ratio={mem['recovery']['depth_ratio']:.2f} "
               f"oom_ratio={mem['oom']['makespan_ratio']:.3f} "
               f"oom_events={mem['oom']['mem_oom_events']}", flush=True)
+        tr = smoke["trace"]
+        print(f"# smoke trace overhead={tr['overhead_ratio']:.3f}x "
+              f"clocks_equal={tr['makespan_pipelined_equal']} "
+              f"bit_identical={tr['bit_identical']} "
+              f"chaos_top_stall={tr['chaos']['top_stall']} "
+              f"chaos_total_pct={tr['chaos']['decomposition_total_pct']:.2f}",
+              flush=True)
         if args.json:
             _write_json(args.json, {**meta, "smoke_result": smoke})
         print(f"# total {time.time() - t0:.1f}s", flush=True)

@@ -74,6 +74,9 @@ class BlockBackend:
     def __init__(self, dtype: str = "float64"):
         self.dtype = dtype
         self.stats = BackendStats()
+        # flight recorder (core.trace): when set, compiled backends record
+        # compile-cache hits/misses and fallbacks at dispatch time
+        self.tracer = None
 
     # -- storage ------------------------------------------------------------
     def from_host(self, arr: np.ndarray, placement: Tuple[int, int]):

@@ -117,12 +117,17 @@ class JaxBackend(BlockBackend):
         inputs = self._colocate(inputs, placement)
         key = structural_key(salt, op, meta, self._signature(inputs))
         fn = self._cache.get(key)
+        tr = self.tracer
         if fn is not None:
             self.stats.jit_calls += 1
+            if tr is not None:
+                tr.record("compile_hit", op, placement[0], placement[1])
             return fn(*inputs)
         builder = build(op, meta)
         if builder is None:  # interpreter fallback (host round-trip, counted)
             self.stats.fallbacks += 1
+            if tr is not None:
+                tr.record("fallback", op, placement[0], placement[1])
             out = execute_block_op(op, meta, [self.to_host(x) for x in inputs])
             return self.from_host(out, placement)
         jitted = self._jax.jit(builder)
@@ -131,6 +136,9 @@ class JaxBackend(BlockBackend):
         out = jitted(*inputs)
         self._jax.block_until_ready(out)  # charge compile+first-run to compile_s
         self._cache.put(key, jitted, compile_seconds=perf_counter() - t0)
+        if tr is not None:
+            tr.record("compile_miss", op, placement[0], placement[1],
+                      args={"compile_s": perf_counter() - t0})
         return out
 
     def _signature(self, inputs) -> Tuple[Tuple[Tuple[int, ...], str], ...]:

@@ -26,6 +26,7 @@ from .layout import (
 from .plan import PlacementPlan, PlanCache, SchedStats, fingerprint as plan_fingerprint, replay_plan
 from .reshard import reshard, reshard_naive
 from .schedulers import DynamicScheduler, LSHS, RoundRobinScheduler, make_scheduler
+from .trace import FlightRecorder, TraceEvent
 from . import bounds
 
 __all__ = [
@@ -40,6 +41,7 @@ __all__ = [
     "CostModel",
     "DynamicScheduler",
     "Executor",
+    "FlightRecorder",
     "GraphArray",
     "HierarchicalLayout",
     "LSHS",
@@ -50,6 +52,7 @@ __all__ = [
     "PlanCache",
     "RoundRobinScheduler",
     "SchedStats",
+    "TraceEvent",
     "WorkerClocks",
     "plan_fingerprint",
     "replay_plan",

@@ -246,6 +246,11 @@ class ChaosEngine:
         ctx.state.transition_hook = self._on_transition
         ctx.executor.chaos = self
         ctx.chaos_engine = self
+        # flight recorder: tap the chaos clock track too, so traced runs see
+        # every charge/replay placement as an ``op`` event on track "chaos"
+        tracer = getattr(ctx, "tracer", None)
+        if tracer is not None:
+            tracer.attach_clocks(self.clocks, "chaos")
 
     def rebind(self, new_ctx) -> None:
         """Carry the engine across an ``elastic_relayout``: clock rows and
@@ -355,6 +360,13 @@ class ChaosEngine:
             self.stats.retries += min(faults, self.retry.max_retries)
             self.stats.backoff_s += wait
             self.clocks.busy[node, worker] += wait
+            tr = self.executor.tracer
+            if tr is not None:
+                t1 = float(self.clocks.busy[node, worker])
+                tr.record("retry", getattr(op, "op", "?"), node, worker,
+                          t0=t1 - wait, t1=t1,
+                          args={"out": op.out_id, "faults": faults,
+                                "backoff_s": wait})
         work, in_objs, xfers = self._op_profile(op, node)
         for _src, obj, _size in xfers:
             self.holders(obj).add(node)
@@ -402,10 +414,22 @@ class ChaosEngine:
             self.stats.oom_events += 1
             self.stats.oom_evicted += (
                 mm.stats.spills + mm.stats.recompute_drops - before)
+            tr = self.executor.tracer
+            if tr is not None:
+                tr.record("oom", "oom", node, -1, t0=_t, t1=_t,
+                          args={"node": node, "factor": factor,
+                                "evicted": mm.stats.spills
+                                + mm.stats.recompute_drops - before})
             # the eviction storm is local d2h write-back (stats-only); any
             # nested fault-in pauses every worker on the node
             busy_s, _net_s = mm.drain_stalls()
             if busy_s:
+                if tr is not None:
+                    for w in range(self.clocks.workers_per_node):
+                        t1 = float(self.clocks.busy[node, w]) + busy_s
+                        tr.record("mem_stall", "oom", node, w,
+                                  t0=t1 - busy_s, t1=t1,
+                                  args={"stall_s": busy_s})
                 self.clocks.busy[node, :] += busy_s
 
     # -- node death ---------------------------------------------------------
@@ -431,6 +455,11 @@ class ChaosEngine:
             holders.discard(node)
         lost = self.executor._drop_node_blocks(node, home_fn=self._home)
         self.stats.blocks_lost += len(lost)
+        tr = self.executor.tracer
+        if tr is not None:
+            t = self._fail_at.get(node, self.clocks.makespan())
+            tr.record("node_death", f"node{node}", node, -1, t0=t, t1=t,
+                      args={"node": node, "lost": len(lost)})
         return lost
 
     # -- lineage replay -----------------------------------------------------

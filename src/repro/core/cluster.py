@@ -111,6 +111,12 @@ class WorkerClocks:
         # defaults are exact identities, so nominal tracks are unaffected.
         self.node_slowdown = np.ones(k)
         self.link_factor = 1.0
+        # flight-recorder tap (core.trace.FlightRecorder.attach_clocks):
+        # called after every place() with the full start-time breakdown.
+        # Read-only: the recorder never mutates clocks, so tracing cannot
+        # perturb simulated time.  Clones never record (what-if simulations
+        # are not real placements).
+        self.recorder = None
 
     def set_chaos(self, node_slowdown, link_factor: float = 1.0) -> None:
         """Install chaos factors: ``node_slowdown[j]`` (>= 1) multiplies
@@ -129,6 +135,7 @@ class WorkerClocks:
         c.ready = dict(self.ready)
         c.node_slowdown = self.node_slowdown.copy()
         c.link_factor = self.link_factor
+        c.recorder = None
         return c
 
     def reset(self) -> None:
@@ -158,6 +165,9 @@ class WorkerClocks:
         ``(start, finish)``.
         """
         cm = self.cost_model
+        rec = self.recorder
+        w_busy0 = float(self.busy[node, worker]) if rec is not None else 0.0
+        xlog = [] if rec is not None else None
         t_ready = 0.0
         for obj, _elements in in_objs:
             t_ready = max(t_ready, self.ready.get(obj, 0.0))
@@ -171,11 +181,16 @@ class WorkerClocks:
             self.net_in[node] = t1
             if not self.overlap:
                 self.busy[node, worker] = t1
+            if xlog is not None:
+                xlog.append((src, obj, elements, t0, t1))
             t_xfer = max(t_xfer, t1)
         start = max(self.busy[node, worker], t_ready, t_xfer)
         end = start + cm.compute_seconds(work_elements) * self.node_slowdown[node]
         self.busy[node, worker] = end
         self.ready[out_obj] = end
+        if rec is not None:
+            rec(self, node, worker, out_obj, work_elements, in_objs, xlog,
+                w_busy0, t_ready, t_xfer, start, end)
         return start, end
 
     def estimate_finish(
@@ -266,6 +281,10 @@ class ClusterState:
         # influencing scheduling (clones never fire it: what-if simulations
         # are not real transitions)
         self.transition_hook = None
+        # flight recorder (core.trace): when set, every transition records
+        # the operand transfers it caused (with byte counts).  Separate from
+        # ``transition_hook`` — the chaos engine owns that single slot.
+        self.tracer = None
         # optional per-node memory budget in elements (core.memory enforces
         # it at the executor layer; recorded here for reporting only — the
         # scheduling objective is deliberately budget-blind so budgeted and
@@ -292,6 +311,7 @@ class ClusterState:
         c.clocks_sync = self.clocks_sync.clone()
         c.clocks_pipe = self.clocks_pipe.clone()
         c.transition_hook = None
+        c.tracer = None
         return c
 
     def add_object(
@@ -345,6 +365,8 @@ class ClusterState:
         and returns the op's (start, finish) on the *pipelined* track."""
         if worker is None:
             worker = self.pick_worker(node)
+        tracer = self.tracer
+        n_xfer0 = len(self.transfers) if tracer is not None else 0
         xfers: List[Tuple[int, int, float]] = []  # (src, obj, elements)
         for obj in inputs:
             holders = self.M.get(obj)
@@ -379,8 +401,12 @@ class ClusterState:
         self.add_object(out_obj, node, worker, out_elements)
         in_objs = [(obj, self.obj_size[obj]) for obj in inputs]
         work = out_elements + sum(e for _o, e in in_objs)
-        self.clocks_sync.place(node, worker, out_obj, work, in_objs, xfers)
+        eta_sync = self.clocks_sync.place(node, worker, out_obj, work,
+                                          in_objs, xfers)
         eta = self.clocks_pipe.place(node, worker, out_obj, work, in_objs, xfers)
+        if tracer is not None and len(self.transfers) > n_xfer0:
+            tracer.on_transition(self, node, worker, out_obj, out_elements,
+                                 self.transfers[n_xfer0:], eta_sync, eta)
         if self.transition_hook is not None:
             self.transition_hook(node, out_obj, out_elements, inputs, worker, eta)
         return eta

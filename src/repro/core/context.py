@@ -54,6 +54,7 @@ class ArrayContext:
         mem_capacity: Optional[float] = None,
         gc: Optional[bool] = None,
         mem_watermarks: Tuple[float, float] = (0.9, 0.75),
+        trace: Union[bool, int, object] = False,
     ):
         # backend: the block-kernel execution substrate (``repro.backend``):
         # "numpy" (reference interpreter), "jax" (compiled, device-resident),
@@ -130,6 +131,99 @@ class ArrayContext:
             cm.hbm_bw, cm.link_bw, self.scheduler.name,
             getattr(self.scheduler, "dest_hint", False), seed, auto_layout,
         )).encode())
+        # flight recorder (core.trace): ``trace`` is False (off), True
+        # (default capacity), an int capacity, or a FlightRecorder to share.
+        # The recorder observes — it never mutates clocks, RNG or stores —
+        # so traced runs are bit- and clock-identical to untraced ones.
+        self.tracer = None
+        # note: not ``if trace:`` — an empty FlightRecorder is len()-falsy
+        if trace is not None and trace is not False and trace != 0:
+            from .trace import FlightRecorder
+
+            if isinstance(trace, FlightRecorder):
+                rec = trace
+            elif isinstance(trace, bool):
+                rec = FlightRecorder()
+            else:
+                rec = FlightRecorder(capacity=int(trace))
+            self._install_tracer(rec)
+        # unified metrics registry (repro.obs.metrics): every stats source
+        # registers as a named provider and ``loads()`` is one ``snapshot()``
+        # — the key schema is golden-tested per feature set in test_obs
+        from repro.obs.metrics import MetricsRegistry
+
+        self.metrics = MetricsRegistry()
+        self._register_metrics()
+
+    def _install_tracer(self, rec) -> None:
+        self.tracer = rec
+        self.executor.tracer = rec
+        self.state.tracer = rec
+        rec.attach_clocks(self.state.clocks_sync, "sync")
+        rec.attach_clocks(self.state.clocks_pipe, "pipe")
+        if self.executor.backend is not None:
+            self.executor.backend.tracer = rec
+
+    def _register_metrics(self) -> None:
+        """Wire the runtime stats objects into the registry as providers, in
+        the historical ``loads()`` assembly order (cluster summary, executor
+        and scheduling counters, comm bounds, backend substrate, memory
+        manager, chaos engine) so the merged key schema is stable."""
+        reg = self.metrics
+
+        def _cluster():
+            return self.state.summary()
+
+        def _runtime():
+            st = self.sched_stats
+            st.note_exec(self.executor.stats)
+            return {
+                "n_rfc": self.executor.stats.n_rfc,
+                "transfers": self.state.network_elements(),
+                "makespan": self.state.makespan(pipeline=self.pipeline),
+                "pending_ops": self.executor.pending_count(),
+                "plan_hits": st.plan_hits,
+                "plan_misses": st.plan_misses,
+                "sched_overhead_s": st.scheduling_overhead_s,
+                "dispatch_s": st.dispatch_s,
+                "drain_s": st.drain_s,
+                "reshards": st.reshards,
+                "reshard_moved": st.reshard_moved_elements,
+            }
+
+        def _comm():
+            # comm-bound accounting: per linalg op, measured network
+            # elements / moved-element floor (``bounds``)
+            st = self.sched_stats
+            out = {}
+            for op, ratio in st.comm_ratios.items():
+                out[f"comm_moved_{op}"] = st.comm_moved[op]
+                out[f"comm_lower_{op}"] = st.comm_lower[op]
+                out[f"comm_ratio_{op}"] = ratio
+            return out
+
+        def _backend():
+            be = self.executor.backend
+            if be is None:
+                return {}
+            self.sched_stats.note_backend(be)
+            return be.counters()
+
+        def _memory():
+            self.sched_stats.note_memory(self.executor.memory)
+            return dict(self.sched_stats.mem)
+
+        def _chaos():
+            if self.chaos_engine is None:
+                return {}
+            return self.chaos_engine.summary()
+
+        reg.register_provider("cluster", _cluster)
+        reg.register_provider("runtime", _runtime)
+        reg.register_provider("comm", _comm)
+        reg.register_provider("backend", _backend)
+        reg.register_provider("memory", _memory)
+        reg.register_provider("chaos", _chaos)
 
     # -- creation (eager, §4) -------------------------------------------------
     def _layout(self, grid: ArrayGrid,
@@ -234,6 +328,10 @@ class ArrayContext:
                 replay_plan(cached, fp.verts, self.state, self.executor, stats=stats)
                 stats.replay_s += perf_counter() - t1
                 stats.plan_hits += 1
+                if self.tracer is not None:
+                    self.tracer.record(
+                        "plan_hit", f"fp:{fp.rng_key & 0xFFFF:04x}",
+                        args={"roots": len(roots)})
                 return ga
             recorder = PlanRecorder(fp.cid_of)
         else:
@@ -247,6 +345,10 @@ class ArrayContext:
         if recorder is not None:
             self.plan_cache.put(fp.key, recorder.plan())
             stats.plan_misses += 1
+            if self.tracer is not None:
+                self.tracer.record(
+                    "plan_miss", f"fp:{fp.rng_key & 0xFFFF:04x}",
+                    args={"roots": len(roots)})
         return ga
 
     @staticmethod
@@ -396,36 +498,38 @@ class ArrayContext:
 
     # -- reporting ------------------------------------------------------------------
     def loads(self) -> Dict[str, float]:
-        d = self.state.summary()
-        d["n_rfc"] = self.executor.stats.n_rfc
-        d["transfers"] = self.state.network_elements()
-        d["makespan"] = self.state.makespan(pipeline=self.pipeline)
-        d["pending_ops"] = self.executor.pending_count()
-        d["plan_hits"] = self.sched_stats.plan_hits
-        d["plan_misses"] = self.sched_stats.plan_misses
-        d["sched_overhead_s"] = self.sched_stats.scheduling_overhead_s
-        d["dispatch_s"] = self.sched_stats.dispatch_s
-        d["reshards"] = self.sched_stats.reshards
-        d["reshard_moved"] = self.sched_stats.reshard_moved_elements
-        # comm-bound accounting: per linalg op, measured network elements /
-        # moved-element floor (``bounds`` §"moved-element floors")
-        for op, ratio in self.sched_stats.comm_ratios.items():
-            d[f"comm_moved_{op}"] = self.sched_stats.comm_moved[op]
-            d[f"comm_lower_{op}"] = self.sched_stats.comm_lower[op]
-            d[f"comm_ratio_{op}"] = ratio
-        # backend substrate counters: per-op dispatches, compiled-callable
-        # invocations, host/device transfers, and the structural
-        # compile-cache hit/miss/compile-time split (jax/pallas)
-        be = self.executor.backend
-        if be is not None:
-            d.update(be.counters())
-            self.sched_stats.note_backend(be)
-        # memory-budget accounting: watermarks, peaks, GC/spill/backpressure
-        self.sched_stats.note_memory(self.executor.memory)
-        d.update(self.sched_stats.mem)
+        """One merged snapshot of every runtime stats source — cluster load
+        summary, executor/scheduling counters, comm-bound ratios, backend
+        substrate counters, memory-budget accounting, chaos summary — via the
+        unified ``MetricsRegistry`` (see ``_register_metrics``).  The key
+        schema per feature set is golden-tested in ``tests/test_obs.py``."""
+        return self.metrics.snapshot()
+
+    def export_trace(self, path: Optional[str] = None) -> Dict:
+        """Export the flight recorder as Chrome/Perfetto ``trace_event`` JSON
+        (write to ``path`` when given, return the document either way).
+        Requires the context to have been built with ``trace=...``."""
+        if self.tracer is None:
+            raise RuntimeError(
+                "tracing is off — construct ArrayContext(trace=True)")
+        from repro.obs.perfetto import export_chrome_trace, write_chrome_trace
+
+        makespans = {
+            "sync": self.state.makespan(pipeline=False),
+            "pipe": self.state.makespan(pipeline=True),
+        }
         if self.chaos_engine is not None:
-            d.update(self.chaos_engine.summary())
-        return d
+            makespans["chaos"] = self.chaos_engine.clocks.makespan()
+        meta = {
+            "backend": self.backend,
+            "nodes": self.cluster.num_nodes,
+            "workers_per_node": self.cluster.workers_per_node,
+            "bytes_per_element": self.state.cost_model.bytes_per_element,
+        }
+        if path is not None:
+            return write_chrome_trace(path, self.tracer,
+                                      makespans=makespans, meta=meta)
+        return export_chrome_trace(self.tracer, makespans=makespans, meta=meta)
 
     def reset_loads(self) -> None:
         """Zero the load counters and simulated clocks (keep residency maps)
@@ -438,3 +542,5 @@ class ArrayContext:
             self.executor.backend.stats.reset()
         self.executor.memory.stats.reset()
         self.sched_stats.reset()
+        if self.tracer is not None:
+            self.tracer.clear()

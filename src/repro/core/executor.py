@@ -89,6 +89,7 @@ class ExecStats:
     n_flushes: int = 0      # event-loop drains
     peak_queue: int = 0     # max total ops pending at once
     dispatch_s: float = 0.0  # wall time inside run_op — the γ term in seconds
+    drain_s: float = 0.0    # wall time inside flush() — pipelined queue drain
 
     def reset(self) -> None:
         self.n_rfc = 0
@@ -98,6 +99,7 @@ class ExecStats:
         self.n_flushes = 0
         self.peak_queue = 0
         self.dispatch_s = 0.0
+        self.drain_s = 0.0
 
 
 class Executor:
@@ -128,10 +130,15 @@ class Executor:
         # optional retire-order capture (set to a list to record out_ids in
         # the order flush() executes them — the drain-order regression hook)
         self.retire_log: Optional[List[int]] = None
+        self._flush_depth = 0  # drain_s accumulates at the outermost flush
         # chaos runtime (core.chaos.ChaosEngine.attach installs itself here):
         # when set, dispatch draws seeded transient faults and flush() drains
         # through the fault-injecting event loop instead of the fast path
         self.chaos = None
+        # flight recorder (core.trace.FlightRecorder): when set, dispatch,
+        # retirement, replay and memory events are recorded.  None keeps
+        # every hot path at one attribute load + is-None test.
+        self.tracer = None
         if mode == "sim":
             self.backend = None
             self.dtype = dtype or "float64"
@@ -170,6 +177,10 @@ class Executor:
             meta["path"], meta["key"] = ckpt
         self.lineage[vid] = OpRecord(vid, f"create:{kind}", meta, (), placement)
         elements = int(np.prod(shape)) if shape else 1
+        if self.tracer is not None:
+            self.tracer.record("create", f"create:{kind}", placement[0],
+                               placement[1],
+                               args={"out": vid, "elements": elements})
         if self.mode == "sim":
             self.store[vid] = None
             self.memory.on_materialize(vid, placement[0], elements)
@@ -235,13 +246,21 @@ class Executor:
         accumulates in ``stats.dispatch_s`` (the per-op γ overhead, Fig. 8)."""
         t0 = perf_counter()
         self.stats.n_rfc += 1
-        self.lineage[out_id] = OpRecord(
+        lineage_rec = OpRecord(
             out_id, op, dict(meta), tuple(in_ids), placement, times=eta
         )
+        self.lineage[out_id] = lineage_rec
         self.block_home[out_id] = placement
         in_shapes = [self.shapes[self.resolve(i)] for i in in_ids]
         out_shape = infer_shape(op, meta, in_shapes)
         self.shapes[out_id] = out_shape
+        if self.tracer is not None:
+            # deferred args tuple (FlightRecorder._materialize builds the
+            # dict); the lineage record already owns the frozen input tuple
+            self.tracer.record(
+                "dispatch", op, placement[0], placement[1],
+                eta[0] if eta else 0.0, eta[1] if eta else 0.0,
+                (out_id, lineage_rec.in_ids, self.pipeline))
         if self.mode == "sim":
             self.store[out_id] = None
             self.memory.on_materialize(out_id, placement[0],
@@ -294,6 +313,10 @@ class Executor:
         stall = self.memory.admit(
             placement[0], out_elements,
             protect=tuple(self.resolve(i) for i in in_ids))
+        tr = self.tracer
+        if stall and tr is not None:
+            tr.record("backpressure", op, placement[0], placement[1],
+                      args={"out": out_id, "stall_s": stall})
         # operands flow to the backend in their resident representation
         # (numpy arrays / jax device arrays) — no host round-trip here
         ins = [self.get(i) for i in in_ids]
@@ -302,6 +325,9 @@ class Executor:
         self.store[out_id] = out
         self.memory.on_materialize(out_id, placement[0], out_elements)
         self.memory.unpin(in_ids)
+        if tr is not None:
+            tr.record("retire", op, placement[0], placement[1],
+                      args={"out": out_id, "elements": out_elements})
         if self.chaos is None:
             self.memory.drain_stalls()  # stats keep them; nominal clocks don't
         return stall
@@ -332,10 +358,25 @@ class Executor:
         identical (regression-tested) at O(log Q) per retirement.  A blocked
         head registers as a waiter on its first still-pending dependency and
         is re-examined exactly when that dependency retires; each queue is
-        always in exactly one of {on the heap, waiting, empty}."""
-        executed = 0
+        always in exactly one of {on the heap, waiting, empty}.
+
+        Wall time spent draining accumulates in ``stats.drain_s`` — kept
+        separate from ``dispatch_s`` (enqueue-side ``run_op`` overhead) so
+        the scheduler-vs-dispatch overhead split in ``bench_overhead``
+        accounts pipelined queue time instead of under-reporting it."""
         if not self._pending_ids:
             return 0
+        t_drain = perf_counter()
+        self._flush_depth += 1
+        try:
+            return self._flush_inner()
+        finally:
+            self._flush_depth -= 1
+            if self._flush_depth == 0:
+                self.stats.drain_s += perf_counter() - t_drain
+
+    def _flush_inner(self) -> int:
+        executed = 0
         if self.chaos is not None:
             return self._flush_chaos()
         ready: List[Tuple[float, int, Tuple[int, int]]] = []
@@ -385,10 +426,15 @@ class Executor:
         charge the chaos clocks (backoff + straggler-slowed compute +
         degraded transfers), then run the pure block op."""
         eng = self.chaos
+        tr = self.tracer
         node, worker = placement if placement is not None else head.placement
         if node in eng.dead:
             node, worker = eng.pick_node(head, exclude=eng.dead)
             eng.stats.rerouted_ops += 1
+            if tr is not None:
+                tr.record("reroute", head.op, node, worker,
+                          args={"out": head.out_id,
+                                "from": head.placement[0]})
         if head.faults > eng.retry.max_retries:
             # per-op retry budget exhausted on this node: the final attempt
             # migrates to the best surviving node (timeout escalation)
@@ -404,6 +450,11 @@ class Executor:
         busy_s, _net_s = self.memory.drain_stalls()
         if busy_s:
             eng.clocks.busy[node, worker] += busy_s
+            if tr is not None:
+                t1 = float(eng.clocks.busy[node, worker])
+                tr.record("mem_stall", head.op, node, worker,
+                          t0=t1 - busy_s, t1=t1,
+                          args={"out": head.out_id, "stall_s": busy_s})
 
     def _kill_and_replay(self, node: int) -> None:
         """A node died mid-drain: drop its blocks (object-store loss), then
@@ -455,6 +506,11 @@ class Executor:
                     eng.spec_target[head.out_id] = eng.pick_node(
                         head, exclude=eng.dead)
                     eng.stats.rerouted_ops += 1
+                    if self.tracer is not None:
+                        nn, nw = eng.spec_target[head.out_id]
+                        self.tracer.record(
+                            "reroute", head.op, nn, nw,
+                            args={"out": head.out_id, "from": tgt[0]})
             projs = [
                 eng.project(h, placement=eng.spec_target.get(h.out_id)
                             or h.placement)
@@ -478,9 +534,19 @@ class Executor:
                         eng.spec_target[head.out_id] = dup
                         eng.stats.spec_wins += 1
                         projs[i] = dup_proj
+                        if self.tracer is not None:
+                            self.tracer.record(
+                                "spec_win", head.op, dup[0], dup[1],
+                                args={"out": head.out_id, "from": cur[0],
+                                      "proj": dup_proj})
                     else:
                         # original wins the race; duplicate cancelled
                         eng.stats.spec_cancelled += 1
+                        if self.tracer is not None:
+                            self.tracer.record(
+                                "spec_loss", head.op, cur[0], cur[1],
+                                args={"out": head.out_id, "dup": dup[0],
+                                      "proj": projs[i]})
             i = min(range(len(heads)), key=lambda j: (projs[j], heads[j][1].seq))
             qkey, head = heads[i]
             tgt = eng.spec_target.get(head.out_id) or head.placement
@@ -577,6 +643,9 @@ class Executor:
             replayed += 1
             if self.backend is not None:
                 self.backend.stats.replays += 1
+            if self.tracer is not None:
+                self.tracer.record("replay", rec.op, placement[0],
+                                   placement[1], args={"out": vid})
             if eng is not None:
                 eng.note_replayed(vid, placement, rec)
 
@@ -602,7 +671,13 @@ class Executor:
             if eng is None:
                 return  # stats keep the stall; nominal clocks never move
             if busy_s:
-                eng.clocks.busy[node, eng.pick_worker(node)] += busy_s
+                worker = eng.pick_worker(node)
+                eng.clocks.busy[node, worker] += busy_s
+                if self.tracer is not None:
+                    t1 = float(eng.clocks.busy[node, worker])
+                    self.tracer.record("mem_stall", "recover", node, worker,
+                                       t0=t1 - busy_s, t1=t1,
+                                       args={"stall_s": busy_s})
 
         stack: List[Tuple[int, bool]] = [
             (v, False) for v in reversed([self.resolve(v) for v in vids])

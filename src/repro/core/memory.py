@@ -238,10 +238,15 @@ class MemoryManager:
         if vid not in self.live_set:
             return
         e = self.elems.get(vid, 0)
+        node = self.node_of.get(vid, -1)
         self._forget(vid)
         self.executor.store[vid] = None
         self.stats.gc_freed_blocks += 1
         self.stats.gc_freed_elements += e
+        tr = self.executor.tracer
+        if tr is not None:
+            tr.record("gc_free", f"obj{vid}", node, -1,
+                      args={"obj": vid, "elements": e})
 
     def flush_deferred(self) -> None:
         """Run the frees recorded while deferral was active (recovery end)."""
@@ -337,6 +342,7 @@ class MemoryManager:
         simulated stall in clock-track seconds."""
         stall = 0.0
         ex = self.executor
+        tr = ex.tracer
         for vid, pinned in self._victims(node, protect=protect):
             if self.live.get(node, 0.0) <= target:
                 break
@@ -348,6 +354,9 @@ class MemoryManager:
                 self._forget(vid)
                 ex.store[vid] = None
                 self.stats.recompute_drops += 1
+                if tr is not None:
+                    tr.record("evict_drop", f"obj{vid}", node, -1,
+                              args={"obj": vid, "elements": e})
             else:
                 host = ex.backend.spill_out(ex.store[vid])
                 self.spill_store[vid] = host
@@ -356,6 +365,10 @@ class MemoryManager:
                 self.stats.spills += 1
                 self.stats.spill_elements += e
                 stall += self._stall_seconds(e)
+                if tr is not None:
+                    tr.record("evict_spill", f"obj{vid}", node, -1,
+                              args={"obj": vid, "elements": e,
+                                    "stall_s": self._stall_seconds(e)})
         self._net_stall_acc += stall
         return stall
 
@@ -405,6 +418,10 @@ class MemoryManager:
         self.stats.backpressure_stall_s += self._stall_seconds(e)
         self.stats.faultins += 1
         self.stats.faultin_elements += e
+        if ex.tracer is not None:
+            ex.tracer.record("fault_in", f"obj{vid}", node, -1,
+                             args={"obj": vid, "elements": e,
+                                   "stall_s": self._stall_seconds(e)})
         value = ex.backend.spill_in(host, (node, 0))
         ex.store[vid] = value
         self.on_materialize(vid, node, e)

@@ -417,6 +417,11 @@ class SchedStats:
     sched_cold_s: float = 0.0   # wall time of cold schedule() calls (incl dispatch)
     replay_s: float = 0.0       # wall time of plan replays (incl dispatch)
     dispatch_s: float = 0.0     # transition + run_op time inside either path
+    # pipelined-drain wall time (``Executor.flush``): ``run_op`` only
+    # *enqueues* in pipelined mode, so dispatch_s alone under-reports what
+    # dispatch actually costs — the queue drain is accounted here, refreshed
+    # by ``note_exec`` (``ArrayContext.loads`` calls it)
+    drain_s: float = 0.0
     # reshard subsystem accounting (``core.reshard``): move-graph schedules,
     # move ops emitted, and the network elements those schedules transferred
     reshards: int = 0
@@ -454,6 +459,11 @@ class SchedStats:
         self.comm_lower[op] = self.comm_lower.get(op, 0.0) + float(lower_elements)
         self.comm_ratios[op] = comm_ratio(self.comm_moved[op], self.comm_lower[op])
 
+    def note_exec(self, exec_stats) -> None:
+        """Refresh the pipelined-drain time from an ``ExecStats`` (wall time
+        inside ``Executor.flush``; 0 for sync contexts)."""
+        self.drain_s = exec_stats.drain_s
+
     def note_memory(self, manager) -> None:
         """Refresh the memory-budget counters from a ``MemoryManager``."""
         self.mem = manager.snapshot()
@@ -490,6 +500,7 @@ class SchedStats:
             "sched_cold_s": self.sched_cold_s,
             "replay_s": self.replay_s,
             "dispatch_s": self.dispatch_s,
+            "drain_s": self.drain_s,
             "sched_overhead_s": self.scheduling_overhead_s,
             "reshards": self.reshards,
             "reshard_ops": self.reshard_ops,
@@ -516,6 +527,7 @@ class SchedStats:
         self.sched_cold_s = 0.0
         self.replay_s = 0.0
         self.dispatch_s = 0.0
+        self.drain_s = 0.0
         self.reshards = 0
         self.reshard_ops = 0
         self.reshard_moved_elements = 0.0

@@ -127,12 +127,17 @@ class SchedulerBase:
         worker: Optional[int] = None,
         recorder=None,
         stats=None,
+        n_options: int = 1,
     ) -> Tuple[int, int]:
         in_ids = [c.vid for c in v.children]
         if worker is None:
             worker = state.pick_worker(node)
         if recorder is not None:
             recorder.dispatched(v, node, worker)
+        if executor.tracer is not None:
+            # deferred args tuple (FlightRecorder._materialize builds the dict)
+            executor.tracer.record("sched", v.op or "add", node, worker,
+                                   0.0, 0.0, (v.vid, n_options))
         t0 = perf_counter() if stats is not None else 0.0
         eta = state.transition(node, v.vid, v.elements, in_ids, worker=worker)
         executor.run_op(v.vid, v.op, v.meta, in_ids, (node, worker), eta=eta)
@@ -168,11 +173,14 @@ class SchedulerBase:
     def _place_op(self, v, forced, state, executor, rng, recorder=None, stats=None) -> None:
         if v.vid in forced:
             node, worker = forced[v.vid]
+            n_options = 1
         else:
             options = self._placement_options(v, state)
             node = self._choose(v, options, state, rng)
             worker = None
-        node, worker = self._dispatch(v, node, state, executor, worker, recorder, stats)
+            n_options = len(options)
+        node, worker = self._dispatch(v, node, state, executor, worker,
+                                      recorder, stats, n_options=n_options)
         v.to_leaf(node, worker)
 
     def _pair(self, v: Vertex, rng: random.Random) -> Tuple[Vertex, Vertex]:
@@ -201,7 +209,8 @@ class SchedulerBase:
             options = sorted(set(options) | {v.meta["dest"]})
         node = self._choose(tmp, options, state, rng)
         node, worker = self._dispatch(tmp, node, state, executor,
-                                      recorder=recorder, stats=stats)
+                                      recorder=recorder, stats=stats,
+                                      n_options=len(options))
         tmp.to_leaf(node, worker)
         kids = [c for c in v.children if c is not a and c is not b]
         kids.append(tmp)
@@ -230,13 +239,16 @@ class SchedulerBase:
             return
         if v.vid in forced:
             node, worker = forced[v.vid]
+            n_options = 1
         else:
             a, b = v.children
             options = sorted(state.nodes_of(a.vid) | state.nodes_of(b.vid))
             node = self._choose(v, options, state, rng)
             worker = None
+            n_options = len(options)
         v.op = v.op or "add"
-        node, worker = self._dispatch(v, node, state, executor, worker, recorder, stats)
+        node, worker = self._dispatch(v, node, state, executor, worker,
+                                      recorder, stats, n_options=n_options)
         v.to_leaf(node, worker)
 
 

@@ -114,6 +114,10 @@ def main() -> None:
     ap.add_argument("--fail-node", type=int, default=None,
                     help="inject a node failure mid-run, then recover from "
                          "lineage (any data-holding backend: numpy/jax/pallas)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a flight-recorder trace and write "
+                         "Chrome/Perfetto trace_event JSON to PATH (inspect "
+                         "with python -m repro.launch.trace_report PATH)")
     ap.add_argument("--chaos", action="store_true",
                     help="run the composed chaos scenario instead "
                          "(launch.chaos: stragglers + node death + transient "
@@ -127,8 +131,14 @@ def main() -> None:
             nodes=args.nodes, workers=args.workers, backend=backend,
             iters=max(args.iters, 3), seed=args.seed,
             scheduler=args.scheduler, plan_cache=args.plan_cache,
+            trace_path=args.trace,
         )
         print(json.dumps(report, indent=2, default=float))
+        tr = report.get("trace")
+        if tr is not None:
+            print(f"# trace: {tr['events']} events -> {tr['path']}, "
+                  f"critical path {tr['critical_path_len']} ops, top stall "
+                  f"{tr['top_stall']}")
         return
 
     ctx = ArrayContext(
@@ -143,6 +153,7 @@ def main() -> None:
         auto_layout=args.auto_layout,
         mem_capacity=args.mem_capacity,
         gc=True if args.gc else None,
+        trace=args.trace is not None,
     )
     out = build_workload(ctx, args.workload, args.scale, iters=args.iters,
                          reshard_method=args.reshard_method)
@@ -175,6 +186,11 @@ def main() -> None:
     )
     report.update(ctx.sched_stats.as_dict())
     print(json.dumps(report, indent=2, default=float))
+    if args.trace is not None:
+        from repro.obs import analyze, summary_line
+
+        doc = ctx.export_trace(args.trace)
+        print(summary_line(analyze(doc), path=args.trace))
 
 
 if __name__ == "__main__":

@@ -65,6 +65,7 @@ def run_scenario(
     traffic: int = 0,
     mem_capacity: Optional[float] = None,
     gc: bool = False,
+    trace: bool = False,
 ) -> Dict:
     """One full scenario run under ``plan``: ``iters`` Newton iterations on
     an (n, d) design matrix split over ``2 * nodes`` row blocks, with an
@@ -81,7 +82,7 @@ def run_scenario(
         cluster=ClusterSpec(nodes, workers), node_grid=(nodes, 1),
         scheduler=scheduler, backend=backend, pipeline=True, seed=seed,
         plan_cache=plan_cache, mem_capacity=mem_capacity,
-        gc=True if gc else None,
+        gc=True if gc else None, trace=trace,
     )
     engine = ctx.enable_chaos(plan, seed=chaos_seed, retry=retry)
     X = ctx.random((n, d), grid=(q, 1))
@@ -158,6 +159,7 @@ def run_chaos_scenario(
     oom_at: Optional[float] = None,
     oom_factor: float = 0.5,
     correlated_kill: bool = False,
+    trace_path: Optional[str] = None,
 ) -> Dict:
     """Fault-free vs chaos comparison on one scenario (module docstring).
 
@@ -211,8 +213,11 @@ def run_chaos_scenario(
         spec_threshold=spec_threshold,
         oom_events=ooms,
     )
+    # only the chaos leg is traced; the fault-free leg and the determinism
+    # re-run stay untraced, so ``identical`` / ``deterministic`` double as
+    # live assertions that the recorder changed no bits and no clocks
     chaos = run_scenario(plan, retry=retry, mem_capacity=capacity,
-                         gc=use_mem, **kw)
+                         gc=use_mem, trace=trace_path is not None, **kw)
     identical = (
         base["beta"].tobytes() == chaos["beta"].tobytes()
         and base["served"] == chaos["served"]
@@ -253,6 +258,21 @@ def run_chaos_scenario(
     report.update(stats.as_dict())
     report.update(chaos["memory"])
     report["chaos_dead_nodes"] = sorted(chaos["engine"].dead)
+    if trace_path is not None:
+        from repro.obs import analyze, top_segments
+
+        doc = chaos["ctx"].export_trace(trace_path)
+        a = analyze(doc)
+        report["trace"] = {
+            "path": trace_path,
+            "events": a["events"],
+            "dropped": a["dropped"],
+            "critical_path_len": a["critical_path_len"],
+            "top_stall": a["top_stall"],
+            "breakdown_pct": a["breakdown_pct"],
+            "decomposition_total_pct": a["decomposition_total_pct"],
+            "segments": top_segments(a),
+        }
     return report
 
 
@@ -301,6 +321,10 @@ def main() -> None:
                     action="store_true",
                     help="kill the --fail-nodes set as one correlated group "
                          "(rack loss) instead of independent deaths")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a flight-recorder trace of the chaos leg "
+                         "and write Chrome/Perfetto trace_event JSON to PATH "
+                         "(inspect with python -m repro.launch.trace_report)")
     ap.add_argument("--assert-gate", action="store_true",
                     help="exit nonzero unless identical + deterministic and "
                          "makespan_ratio <= 1.5 (<= 2.0 with --mem-budget/"
@@ -319,8 +343,15 @@ def main() -> None:
         scheduler=args.scheduler, plan_cache=args.plan_cache,
         mem_budget=args.mem_budget, oom_at=args.oom_at,
         oom_factor=args.oom_factor, correlated_kill=args.correlated_kill,
+        trace_path=args.trace,
     )
     print(json.dumps(report, indent=2, default=float))
+    tr = report.get("trace")
+    if tr is not None:
+        print(f"# trace: {tr['events']} events -> {tr['path']}, critical "
+              f"path {tr['critical_path_len']} ops, top stall "
+              f"{tr['top_stall']} "
+              f"({tr['breakdown_pct'].get(tr['top_stall'], 0.0):.1f}%)")
     if args.assert_gate:
         budgeted = args.mem_budget is not None or args.oom_at is not None
         limit = 2.0 if budgeted else 1.5
@@ -328,6 +359,12 @@ def main() -> None:
               and report["makespan_ratio"] <= limit
               and (not budgeted or report["mem_violations"] == 0))
         if not ok:
+            if tr is not None:
+                # where did the time go? the top critical-path segments
+                # are the first thing to look at when the gate trips
+                print("# gate failure: top critical-path segments:")
+                for seg in tr["segments"]:
+                    print(f"#   {seg}")
             raise SystemExit("chaos gate FAILED: "
                              f"identical={report['identical']} "
                              f"deterministic={report['deterministic']} "

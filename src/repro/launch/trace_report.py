@@ -1,0 +1,80 @@
+"""Critical-path report over a ``--trace`` JSON artifact.
+
+    python -m repro.launch.trace_report out.json [--top N] [--json]
+
+Prints event counts, per-track makespans, the makespan decomposition
+(compute / transfer / queue-stall / retry / eviction-stall, total and per
+node) and the longest critical-path segments.  ``--json`` dumps the raw
+analysis dict instead (for scripting).  The input is the Chrome/Perfetto
+trace written by ``ArrayContext.export_trace`` or the launch drivers'
+``--trace PATH`` — the same file Perfetto renders (see ``repro.core.trace``
+for the import path).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.critical_path import BUCKETS, analyze, summary_line, top_segments
+
+
+def render(analysis: dict, trace: dict, top: int = 3) -> str:
+    lines = []
+    other = trace.get("otherData", {})
+    lines.append(summary_line(analysis))
+    counts = other.get("event_counts", {})
+    if counts:
+        lines.append("# events: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(counts.items())))
+    if analysis.get("dropped"):
+        lines.append(f"# ring buffer dropped {analysis['dropped']} events "
+                     "(oldest first) — raise the trace capacity for full "
+                     "attribution")
+    makespans = other.get("makespans", {})
+    if makespans:
+        lines.append("# makespans: " + ", ".join(
+            f"{t}={v:.6e}s" for t, v in sorted(makespans.items())))
+    lines.append(f"# decomposition of {analysis['track']} makespan "
+                 f"{analysis['makespan']:.6e}s "
+                 f"(sums to {analysis['decomposition_total_pct']:.2f}%):")
+    for b in BUCKETS:
+        lines.append(f"#   {b:<15} {analysis['breakdown'][b]:.6e}s "
+                     f"{analysis['breakdown_pct'][b]:6.2f}%")
+    per_node = analysis.get("per_node_pct", {})
+    if per_node:
+        lines.append("# per-node share of makespan (%):")
+        header = "  ".join(f"{b[:9]:>9}" for b in BUCKETS)
+        lines.append(f"#   {'node':<6}{header}")
+        for node, row in per_node.items():
+            vals = "  ".join(f"{row[b]:9.2f}" for b in BUCKETS)
+            lines.append(f"#   {node:<6}{vals}")
+    segs = top_segments(analysis, n=top)
+    if segs:
+        lines.append(f"# top {len(segs)} critical-path segments:")
+        lines.extend(f"#   {s}" for s in segs)
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="critical-path report over a --trace JSON artifact")
+    ap.add_argument("trace", help="trace_event JSON written by --trace")
+    ap.add_argument("--top", type=int, default=3,
+                    help="longest segments to print (default 3)")
+    ap.add_argument("--json", action="store_true",
+                    help="dump the analysis dict as JSON")
+    args = ap.parse_args(argv)
+    with open(args.trace) as f:
+        trace = json.load(f)
+    analysis = analyze(trace)
+    if args.json:
+        analysis.pop("segments", None)
+        print(json.dumps(analysis, indent=2, default=float))
+    else:
+        print(render(analysis, trace, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,21 @@
+"""Observability: unified metrics registry, Perfetto trace export, and
+critical-path attribution over ``repro.core.trace`` flight-recorder events.
+
+This package depends only on the standard library — ``repro.core`` imports
+nothing from here at module scope, so there is no import cycle.
+"""
+from .critical_path import analyze, summary_line, top_segments
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .perfetto import export_chrome_trace, write_chrome_trace
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "analyze",
+    "export_chrome_trace",
+    "summary_line",
+    "top_segments",
+    "write_chrome_trace",
+]
