@@ -1,0 +1,139 @@
+"""Closed-loop observability benchmark: measured-cost calibration and the
+observed-load controller (the ROADMAP "CommModel calibration" and
+"controller-driven elastic resize" items).
+
+``calibration_smoke()`` is the CI bench-smoke section: micro-profile the
+live jax backend (``repro.obs.calibrate.run_calibration``), then run the
+logreg-Newton smoke twice under ``profile_sync`` tracing — once with the
+hand-picked default cost constants and once with the fitted profile — and
+compare predicted-vs-measured drift (``|ln(predicted/measured)|`` over total
+op seconds, ``repro.obs.critical_path.drift_report``).  The gate asserts the
+calibrated drift is at most half the default drift, and that the calibrated
+run still matches the float64 numpy oracle to 1e-6 relative — calibration
+changes clocks and placement, never values beyond scheduling reassociation.
+
+``controller_smoke()`` runs the composed chaos scenario with the
+``ObservedLoadController`` attached and no resize point passed: the gate
+asserts at least one autonomous grow/shrink fired, the value/determinism
+contracts held, and the degraded makespan stayed within the relaxed 2.0x
+budget (elastic-relayout transfer is charged honestly).
+
+    PYTHONPATH=src python -m benchmarks.run --only calibration
+    PYTHONPATH=src python -m benchmarks.bench_calibration
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core import ArrayContext, ClusterSpec, FlightRecorder
+from repro.launch.chaos import run_chaos_scenario
+from repro.launch.workloads import logreg_newton_loop
+from repro.obs.calibrate import run_calibration
+from repro.obs.critical_path import drift_lines, drift_report
+
+from .common import emit
+
+# smoke scale: small enough for CI, big enough that per-op wall times are
+# resolvable above timer noise on a shared runner
+NODES, WORKERS = 4, 2
+N, D, Q, ITERS = 1 << 10, 32, 8, 2
+
+
+def _profiled_leg(backend: str, calibration=None, dtype=None):
+    """One traced, profile-synced logreg-Newton run; returns (drift report,
+    final beta as numpy)."""
+    rec = FlightRecorder()
+    ctx = ArrayContext(cluster=ClusterSpec(NODES, WORKERS),
+                       node_grid=(NODES, 1), backend=backend, dtype=dtype,
+                       pipeline=True, seed=0, trace=rec,
+                       calibration=calibration)
+    ctx.executor.profile_sync = True
+    try:
+        _g, _h, beta = logreg_newton_loop(ctx, N, D, Q, iters=ITERS,
+                                          reset_loads=False)
+        ctx.flush()
+    finally:
+        ctx.executor.profile_sync = False
+    return drift_report(rec), beta.to_numpy()
+
+
+def calibration_smoke(backend: str = "jax") -> dict:
+    """Default-constants vs fitted-profile drift on the live backend, plus
+    the numpy-f64 oracle parity check.  All legs run float64 so the oracle
+    comparison isolates scheduling effects from dtype."""
+    # numpy f64 oracle: the reference bits the calibrated run must match
+    _d, oracle = _profiled_leg("numpy")
+    # warmup: jit compilation and allocator first-touch land here, not in
+    # the measured legs
+    _profiled_leg(backend, dtype="float64")
+    default_drift, _beta = _profiled_leg(backend, dtype="float64")
+    profile = run_calibration(backend=backend, nodes=NODES, workers=WORKERS,
+                              n=N, d=D, q=Q, iters=ITERS, seed=0)
+    calibrated_drift, beta = _profiled_leg(backend, calibration=profile,
+                                           dtype="float64")
+    denom = max(float(np.abs(oracle).max()), 1e-300)
+    oracle_rel_err = float(np.abs(beta - oracle).max()) / denom
+    return {
+        "backend": backend,
+        "n_ops": calibrated_drift["n_ops"],
+        "drift_default": default_drift["drift"],
+        "drift_calibrated": calibrated_drift["drift"],
+        "drift_ratio": (calibrated_drift["drift"] / default_drift["drift"]
+                        if default_drift["drift"] > 0 else 0.0),
+        "oracle_rel_err": oracle_rel_err,
+        "profile_signature": profile.signature(),
+        "profile_kinds": sorted(profile.compute_coeffs),
+        "gamma_s": profile.gamma_s,
+        "per_kind_calibrated": calibrated_drift["per_kind"],
+    }
+
+
+def controller_smoke() -> dict:
+    """Observed-load autoscaling on the composed chaos scenario — no resize
+    point is passed; every elastic action is the controller's."""
+    r = run_chaos_scenario(
+        nodes=8, workers=2, backend="numpy", iters=3, d=32,
+        fail_nodes=1, stragglers=2, slowdown=4.0, fault_prob=0.02,
+        controller=True,
+    )
+    return {
+        "n_actions": r["controller_n_actions"],
+        "actions": [{k: a[k] for k in
+                     ("iteration", "kind", "from_nodes", "to_nodes", "reason")}
+                    for a in r["controller_actions"]],
+        "grow_shrink_actions": sum(
+            1 for a in r["controller_actions"]
+            if a["kind"] in ("grow", "shrink")),
+        "n_samples": r["controller_n_samples"],
+        "final_nodes": r["controller_final_nodes"],
+        "identical": r["identical"],
+        "deterministic": r["deterministic"],
+        "makespan_ratio": r["makespan_ratio"],
+        "relayout_moved": r["relayout_moved"],
+    }
+
+
+def run(quick: bool = True) -> None:
+    cal = calibration_smoke()
+    emit("calibration.logreg.drift_default", 0.0,
+         f"drift={cal['drift_default']:.3f}")
+    emit("calibration.logreg.drift_calibrated", 0.0,
+         f"drift={cal['drift_calibrated']:.3f};"
+         f"ratio={cal['drift_ratio']:.4f};"
+         f"oracle_rel_err={cal['oracle_rel_err']:.2e}")
+    ctl = controller_smoke()
+    emit("calibration.controller.actions", 0.0,
+         f"n={ctl['n_actions']};grow_shrink={ctl['grow_shrink_actions']};"
+         f"ratio={ctl['makespan_ratio']:.3f};"
+         f"deterministic={ctl['deterministic']}")
+
+
+if __name__ == "__main__":
+    cal = calibration_smoke()
+    print(json.dumps(cal, indent=2, default=float))
+    print("\n".join(drift_lines({"per_kind": cal["per_kind_calibrated"],
+                                 "n_ops": cal["n_ops"],
+                                 "drift": cal["drift_calibrated"]})))
+    print(json.dumps(controller_smoke(), indent=2, default=float))

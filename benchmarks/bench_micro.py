@@ -206,6 +206,9 @@ def smoke() -> dict:
     result["memory"] = bench_memory.memory_smoke()
     from . import bench_trace
     result["trace"] = bench_trace.trace_smoke()
+    from . import bench_calibration
+    result["calibration"] = bench_calibration.calibration_smoke()
+    result["controller"] = bench_calibration.controller_smoke()
     return result
 
 

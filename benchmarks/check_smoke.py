@@ -1,13 +1,22 @@
 """CI bench-smoke regression gate.
 
     python -m benchmarks.check_smoke bench-smoke.json
+    python -m benchmarks.check_smoke --self-test   # sentinel negative test
 
 Evaluates every gated floor on the smoke artifact — plan-cache, reshard,
-backend, chaos, and the comm-bound ``linalg`` ratios — collecting *all*
-failures instead of stopping at the first assert, and on failure prints a
-prior-vs-current table of the gated metrics against the last committed
-trajectory entries (``BENCH_chaos.json``/``BENCH_linalg.json``) so a
+backend, chaos, the comm-bound ``linalg`` ratios, calibration drift, and the
+observed-load controller — collecting *all* failures instead of stopping at
+the first assert, and on failure prints a prior-vs-current table of the
+gated metrics against the last committed trajectory entries
+(``BENCH_chaos.json``/``BENCH_linalg.json``/``BENCH_memory.json``) so a
 regression is readable from the job log without downloading artifacts.
+
+The perf-regression sentinel (``trajectory_gates``) additionally compares
+this run's deterministic metrics against those committed trajectories with
+warn/fail drift bands: a metric drifting past its warn band prints a
+warning, past its fail band fails CI.  ``--self-test`` injects synthetic
+regressions into a healthy artifact and asserts the sentinel trips on every
+one of them — the negative test that keeps the sentinel itself honest.
 
 Gate rationale mirrors the sections it checks:
 - plan-cache: a cache that stops hitting or stops paying for itself is a
@@ -45,6 +54,32 @@ from .bench_memory import TRAJECTORY as MEMORY_TRAJECTORY
 # these trip on a real placement regression, not on noise (sim counts are
 # deterministic)
 LINALG_RATIO_MAX = {"tsqr": 1.5, "cholesky": 2.0, "rsvd": 2.5}
+
+# perf-regression sentinel: per-metric drift bands against the last
+# committed trajectory entry.  Every gated metric is a deterministic
+# simulated/counter quantity, so the bands absorb legitimate re-tuning
+# headroom, not timer noise.  ``direction`` is which way a *regression*
+# moves: "up" metrics regress by growing (ratios where lower is better),
+# "down" metrics regress by shrinking (GC peak reduction, where higher is
+# better).  Bands are multiplicative on the prior value.
+#   (section path in the smoke dict, prior key in the trajectory entry,
+#    trajectory file label, direction, warn factor, fail factor)
+TRAJECTORY_GATES = (
+    (("chaos", "makespan_ratio"), "makespan_ratio", "chaos",
+     "up", 1.05, 1.15),
+    (("linalg", "tsqr", "comm_ratio"), "tsqr_comm_ratio", "linalg",
+     "up", 1.02, 1.10),
+    (("linalg", "cholesky", "comm_ratio"), "cholesky_comm_ratio", "linalg",
+     "up", 1.02, 1.10),
+    (("linalg", "rsvd", "comm_ratio"), "rsvd_comm_ratio", "linalg",
+     "up", 1.02, 1.10),
+    (("memory", "gc", "gc_peak_ratio"), "gc_peak_ratio", "memory",
+     "down", 0.97, 0.90),
+    (("memory", "recovery", "depth_ratio"), "recovery_depth_ratio", "memory",
+     "up", 1.05, 1.20),
+    (("memory", "oom", "makespan_ratio"), "oom_makespan_ratio", "memory",
+     "up", 1.05, 1.25),
+)
 
 
 def check(smoke: dict) -> list:
@@ -164,7 +199,146 @@ def check(smoke: dict) -> list:
     except KeyError as e:
         failures.append(f"trace section malformed: missing {e}")
 
+    try:
+        cal = smoke["calibration"]
+        gate(cal["n_ops"] > 0, f"calibration timed no ops: {cal}")
+        gate(cal["drift_calibrated"] <= 0.5 * cal["drift_default"],
+             "calibrated predicted-vs-measured drift "
+             f"{cal['drift_calibrated']:.3f} is not <= 0.5x the "
+             f"default-constant drift {cal['drift_default']:.3f}")
+        gate(cal["oracle_rel_err"] <= 1e-6,
+             f"calibrated run diverged from the numpy f64 oracle: "
+             f"rel err {cal['oracle_rel_err']:.3e} > 1e-6")
+    except KeyError as e:
+        failures.append(f"calibration section malformed: missing {e}")
+
+    try:
+        ctl = smoke["controller"]
+        gate(ctl["grow_shrink_actions"] >= 1,
+             f"controller fired no autonomous grow/shrink: {ctl}")
+        gate(ctl["identical"],
+             f"controller-driven run diverged in value: {ctl}")
+        gate(ctl["deterministic"],
+             f"controller-driven run not deterministic: {ctl}")
+        gate(ctl["makespan_ratio"] <= 2.0,
+             f"controller-driven degraded makespan exceeds 2.0x "
+             f"fault-free: {ctl}")
+    except KeyError as e:
+        failures.append(f"controller section malformed: missing {e}")
+
     return failures
+
+
+def _dig(smoke: dict, path: tuple):
+    cur = smoke
+    for key in path:
+        if not isinstance(cur, dict) or key not in cur:
+            return None
+        cur = cur[key]
+    return cur
+
+
+def trajectory_gates(smoke: dict,
+                     priors: dict = None) -> tuple:
+    """The perf-regression sentinel: compare this run's deterministic
+    metrics against the last committed trajectory entries with warn/fail
+    drift bands (``TRAJECTORY_GATES``).  Returns ``(failures, warnings)``.
+    Missing trajectory files, empty trajectories, and metrics absent from
+    either side are skipped — the sentinel only ever compares real pairs."""
+    if priors is None:
+        priors = {
+            "chaos": _last_entry(CHAOS_TRAJECTORY),
+            "linalg": _last_entry(LINALG_TRAJECTORY),
+            "memory": _last_entry(MEMORY_TRAJECTORY),
+        }
+    failures, warnings = [], []
+    for path, prior_key, traj, direction, warn_f, fail_f in TRAJECTORY_GATES:
+        current = _dig(smoke, path)
+        prior = priors.get(traj, {}).get(prior_key)
+        if current is None or prior is None:
+            continue
+        current, prior = float(current), float(prior)
+        name = ".".join(str(p) for p in path)
+        if direction == "up":
+            failed = current > prior * fail_f
+            warned = current > prior * warn_f
+        else:
+            failed = current < prior * fail_f
+            warned = current < prior * warn_f
+        drift = (current / prior - 1.0) * 100.0 if prior else float("inf")
+        msg = (f"{name} drifted {drift:+.1f}% vs committed BENCH_{traj}.json "
+               f"({prior:.4g} -> {current:.4g}; warn {warn_f}x, "
+               f"fail {fail_f}x)")
+        if failed:
+            failures.append(msg)
+        elif warned:
+            warnings.append(msg)
+    return failures, warnings
+
+
+def self_test() -> int:
+    """Sentinel negative test: a synthetic healthy artifact must pass the
+    trajectory gates, and each injected regression must trip them."""
+    import copy
+
+    priors = {
+        "chaos": {"makespan_ratio": 1.48},
+        "linalg": {"tsqr_comm_ratio": 1.0, "cholesky_comm_ratio": 1.2,
+                   "rsvd_comm_ratio": 1.05},
+        "memory": {"gc_peak_ratio": 7.25, "recovery_depth_ratio": 1.0,
+                   "oom_makespan_ratio": 1.0},
+    }
+    healthy = {
+        "chaos": {"makespan_ratio": 1.48},
+        "linalg": {"tsqr": {"comm_ratio": 1.0},
+                   "cholesky": {"comm_ratio": 1.2},
+                   "rsvd": {"comm_ratio": 1.05}},
+        "memory": {"gc": {"gc_peak_ratio": 7.25},
+                   "recovery": {"depth_ratio": 1.0},
+                   "oom": {"makespan_ratio": 1.0}},
+    }
+    fails, _warns = trajectory_gates(healthy, priors)
+    if fails:
+        print("# self-test FAILED: healthy artifact tripped the sentinel:")
+        for m in fails:
+            print(f"#   {m}")
+        return 1
+    # one injected regression per gated metric, each past its fail band
+    injections = [
+        (("chaos", "makespan_ratio"), 2.0),
+        (("linalg", "tsqr", "comm_ratio"), 1.2),
+        (("linalg", "cholesky", "comm_ratio"), 1.5),
+        (("linalg", "rsvd", "comm_ratio"), 1.3),
+        (("memory", "gc", "gc_peak_ratio"), 1.1),
+        (("memory", "recovery", "depth_ratio"), 2.0),
+        (("memory", "oom", "makespan_ratio"), 1.6),
+    ]
+    bad = 0
+    for path, value in injections:
+        doc = copy.deepcopy(healthy)
+        node = doc
+        for key in path[:-1]:
+            node = node[key]
+        node[path[-1]] = value
+        fails, _warns = trajectory_gates(doc, priors)
+        name = ".".join(path)
+        if not fails:
+            print(f"# self-test FAILED: injected regression in {name} "
+                  f"(-> {value}) did not trip the sentinel")
+            bad += 1
+        else:
+            print(f"# self-test ok: {name} -> {value} tripped: {fails[0]}")
+    # a missing trajectory must skip, not crash or false-positive
+    fails, warns = trajectory_gates(healthy, {"chaos": {}, "linalg": {},
+                                              "memory": {}})
+    if fails or warns:
+        print("# self-test FAILED: empty priors produced gate output")
+        bad += 1
+    if bad:
+        return 1
+    print("# sentinel self-test passed "
+          f"({len(injections)} injected regressions all tripped)")
+    return 0
 
 
 def gated_floors(smoke: dict) -> dict:
@@ -203,6 +377,16 @@ def gated_floors(smoke: dict) -> dict:
         "decomposition_total_pct")
     out["trace.chaos_decomposition_pct (100+-1)"] = tr.get(
         "chaos", {}).get("decomposition_total_pct")
+    cal = smoke.get("calibration", {})
+    out["calibration.drift_default"] = cal.get("drift_default")
+    out["calibration.drift_calibrated (<=0.5x default)"] = cal.get(
+        "drift_calibrated")
+    out["calibration.oracle_rel_err (<=1e-6)"] = cal.get("oracle_rel_err")
+    ctl = smoke.get("controller", {})
+    out["controller.grow_shrink_actions (>=1)"] = ctl.get(
+        "grow_shrink_actions")
+    out["controller.makespan_ratio (<=2)"] = ctl.get("makespan_ratio")
+    out["controller.deterministic (=1)"] = ctl.get("deterministic")
     return out
 
 
@@ -252,17 +436,23 @@ def print_table(smoke: dict) -> None:
 
 
 def main(argv: list) -> int:
+    if "--self-test" in argv:
+        return self_test()
     path = argv[1] if len(argv) > 1 else "bench-smoke.json"
     with open(path) as f:
         data = json.load(f)
     smoke = data.get("smoke_result", data)
     for section in ("plan_cache", "reshard", "backend", "chaos", "linalg",
-                    "memory", "trace"):
+                    "memory", "trace", "calibration", "controller"):
         if section in smoke:
             print(json.dumps({section: smoke[section]}, indent=2,
                              default=float))
     failures = check(smoke)
+    traj_failures, traj_warnings = trajectory_gates(smoke)
+    failures.extend(traj_failures)
     print_table(smoke)
+    for msg in traj_warnings:
+        print(f"#   WARN: {msg}", flush=True)
     if failures:
         print(f"# {len(failures)} gate(s) FAILED:", flush=True)
         for msg in failures:

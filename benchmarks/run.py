@@ -21,6 +21,7 @@ import time
 
 from . import (
     bench_bounds,
+    bench_calibration,
     bench_chaos,
     bench_serving,
     bench_datasci,
@@ -53,6 +54,8 @@ SUITES = {
     "chaos": bench_chaos,        # beyond-paper: fault-injection robustness
     "memory": bench_memory,      # beyond-paper: budgets + bounded recovery
     "trace": bench_trace,        # beyond-paper: flight recorder + crit path
+    "calibration": bench_calibration,  # beyond-paper: measured-cost fit +
+                                       # observed-load controller
 }
 
 

@@ -338,7 +338,8 @@ class ChaosEngine:
         node, worker = placement if placement is not None else op.placement
         work, in_objs, xfers = self._op_profile(op, node)
         est = self.clocks.estimate_finish(node, work, in_objs, xfers,
-                                          worker=worker)
+                                          worker=worker,
+                                          kind=getattr(op, "op", None))
         return est + self.retry.total_backoff(getattr(op, "faults", 0))
 
     def projected_start(self, op,
@@ -371,7 +372,8 @@ class ChaosEngine:
         for _src, obj, _size in xfers:
             self.holders(obj).add(node)
         start, end = self.clocks.place(node, worker, op.out_id, work,
-                                       in_objs, xfers)
+                                       in_objs, xfers,
+                                       kind=getattr(op, "op", None))
         self.resident[op.out_id] = {node}
         self.actual_home[op.out_id] = (node, worker)
         return start, end
@@ -476,7 +478,8 @@ class ChaosEngine:
         work, in_objs, xfers = self._op_profile(rec, node)
         for _src, obj, _size in xfers:
             self.holders(obj).add(node)
-        self.clocks.place(node, worker, vid, work, in_objs, xfers)
+        self.clocks.place(node, worker, vid, work, in_objs, xfers,
+                          kind=getattr(rec, "op", None))
         self.resident[vid] = {node}
         self.actual_home[vid] = (node, worker)
         self.stats.blocks_replayed += 1

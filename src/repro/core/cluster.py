@@ -44,12 +44,31 @@ class CostModel:
     network load by link bandwidth so heterogeneous channels are
     commensurable; with intra-node transfers discounted by
     ``intra_node_coeff`` (the paper's Dask coefficient).
+
+    A measured-cost calibration (``repro.obs.calibrate``) may install fitted
+    affine coefficients: ``transfer_coeffs = (alpha_s, s_per_byte)`` replaces
+    the pure-bandwidth transfer formula and ``compute_coeffs`` maps an op
+    kind to ``(alpha_s, s_per_element)`` with ``compute_default`` as the
+    fallback pair for kinds the harness never profiled.  All three fields
+    default to ``None``, in which case every formula below reduces exactly
+    to the hand-picked constants — uncalibrated runs are bit-identical to
+    the seed behavior.
     """
 
     mode: str = "paper"  # "paper" | "time"
     bytes_per_element: int = 8
     hbm_bw: float = 819e9       # bytes/s  (TPU v5e HBM)
     link_bw: float = 50e9       # bytes/s  (ICI per link)
+    # -- measured-cost calibration (None => hand-picked constants) ---------
+    compute_coeffs: Optional[Dict[str, Tuple[float, float]]] = None
+    compute_default: Optional[Tuple[float, float]] = None
+    transfer_coeffs: Optional[Tuple[float, float]] = None
+    calibration_sig: Optional[str] = None
+
+    @property
+    def calibrated(self) -> bool:
+        return (self.compute_coeffs is not None
+                or self.transfer_coeffs is not None)
 
     def objective(self, S: np.ndarray) -> float:
         if self.mode == "paper":
@@ -77,11 +96,25 @@ class CostModel:
 
     # -- simulated-time channel costs (clock tracks, independent of ``mode``)
     def transfer_seconds(self, elements: float) -> float:
+        tc = self.transfer_coeffs
+        if tc is not None:
+            return tc[0] + elements * self.bytes_per_element * tc[1]
         return elements * self.bytes_per_element / self.link_bw
 
-    def compute_seconds(self, elements_touched: float) -> float:
+    def compute_seconds(self, elements_touched: float,
+                        kind: Optional[str] = None) -> float:
         """Memory-bound block-op model: time to stream every input and the
-        output through HBM once (roofline floor for elementwise/GEMM tiles)."""
+        output through HBM once (roofline floor for elementwise/GEMM tiles).
+        With a calibration installed, a fitted per-op-kind affine model
+        replaces the roofline floor (``compute_default`` covers unprofiled
+        kinds, including ``kind=None``)."""
+        cc = self.compute_coeffs
+        if cc is not None:
+            pair = cc.get(kind) if kind is not None else None
+            if pair is None:
+                pair = self.compute_default
+            if pair is not None:
+                return pair[0] + elements_touched * pair[1]
         return elements_touched * self.bytes_per_element / self.hbm_bw
 
 
@@ -156,13 +189,15 @@ class WorkerClocks:
         work_elements: float,
         in_objs: Sequence[Tuple[int, int]],
         xfers: Sequence[Tuple[int, int, float]],
+        kind: Optional[str] = None,
     ) -> Tuple[float, float]:
         """Advance the clocks for executing one op on ``(node, worker)``.
 
         ``in_objs`` is ``[(obj, elements), ...]`` over every operand;
         ``xfers`` is ``[(src_node, obj, elements), ...]`` over the operands
-        that must be transferred first.  Returns the op's simulated
-        ``(start, finish)``.
+        that must be transferred first.  ``kind`` selects the calibrated
+        per-op-kind compute coefficients when a calibration is installed
+        (ignored otherwise).  Returns the op's simulated ``(start, finish)``.
         """
         cm = self.cost_model
         rec = self.recorder
@@ -185,7 +220,8 @@ class WorkerClocks:
                 xlog.append((src, obj, elements, t0, t1))
             t_xfer = max(t_xfer, t1)
         start = max(self.busy[node, worker], t_ready, t_xfer)
-        end = start + cm.compute_seconds(work_elements) * self.node_slowdown[node]
+        end = start + (cm.compute_seconds(work_elements, kind)
+                       * self.node_slowdown[node])
         self.busy[node, worker] = end
         self.ready[out_obj] = end
         if rec is not None:
@@ -200,6 +236,7 @@ class WorkerClocks:
         in_objs: Sequence[Tuple[int, int]],
         xfers: Sequence[Tuple[int, int, float]],
         worker: Optional[int] = None,
+        kind: Optional[str] = None,
     ) -> float:
         """Non-mutating ``place``: the finish time a hypothetical placement
         would reach.  ``worker=None`` assumes the node's earliest-free worker
@@ -225,7 +262,8 @@ class WorkerClocks:
                 w_busy = t1
             t_xfer = max(t_xfer, t1)
         start = max(w_busy, t_ready, t_xfer)
-        return start + cm.compute_seconds(work_elements) * self.node_slowdown[node]
+        return start + (cm.compute_seconds(work_elements, kind)
+                        * self.node_slowdown[node])
 
     def makespan(self) -> float:
         return float(self.busy.max()) if self.busy.size else 0.0
@@ -358,11 +396,14 @@ class ClusterState:
         out_elements: int,
         inputs: Sequence[int],
         worker: Optional[int] = None,
+        kind: Optional[str] = None,
     ) -> Tuple[float, float]:
         """Simulate executing an op on ``node``: transfer any non-resident
         inputs (charging net-out at a source and net-in at ``node``), then
         account the output's memory on ``node``.  Advances both clock tracks
-        and returns the op's (start, finish) on the *pipelined* track."""
+        and returns the op's (start, finish) on the *pipelined* track.
+        ``kind`` (the op name) routes calibrated per-op-kind compute
+        coefficients into both tracks; a no-op without a calibration."""
         if worker is None:
             worker = self.pick_worker(node)
         tracer = self.tracer
@@ -402,8 +443,9 @@ class ClusterState:
         in_objs = [(obj, self.obj_size[obj]) for obj in inputs]
         work = out_elements + sum(e for _o, e in in_objs)
         eta_sync = self.clocks_sync.place(node, worker, out_obj, work,
-                                          in_objs, xfers)
-        eta = self.clocks_pipe.place(node, worker, out_obj, work, in_objs, xfers)
+                                          in_objs, xfers, kind=kind)
+        eta = self.clocks_pipe.place(node, worker, out_obj, work, in_objs,
+                                     xfers, kind=kind)
         if tracer is not None and len(self.transfers) > n_xfer0:
             tracer.on_transition(self, node, worker, out_obj, out_elements,
                                  self.transfers[n_xfer0:], eta_sync, eta)
@@ -417,9 +459,11 @@ class ClusterState:
         out_elements: int,
         inputs: Sequence[int],
         worker: Optional[int] = None,
+        kind: Optional[str] = None,
     ) -> float:
         """Objective value (Eq. 2) after a hypothetical placement on ``node``."""
-        return self.simulate_cost_detail(node, out_elements, inputs, worker)[0]
+        return self.simulate_cost_detail(node, out_elements, inputs, worker,
+                                         kind=kind)[0]
 
     def simulate_cost_detail(
         self,
@@ -427,6 +471,7 @@ class ClusterState:
         out_elements: int,
         inputs: Sequence[int],
         worker: Optional[int] = None,
+        kind: Optional[str] = None,
     ) -> Tuple[float, float, float, float]:
         """(Eq.2 objective, transfer elements, est. finish, node load) for a
         hypothetical placement — the trailing entries are LSHS tie-breakers
@@ -459,7 +504,7 @@ class ClusterState:
         in_objs = [(obj, self.obj_size[obj]) for obj in inputs]
         work = out_elements + sum(e for _o, e in in_objs)
         est_finish = self.clocks_pipe.estimate_finish(
-            node, work, in_objs, xfers, worker=worker)
+            node, work, in_objs, xfers, worker=worker, kind=kind)
         return self.cost_model.objective(S), moved, est_finish, float(S[node].sum())
 
     def simulate_cost_batch(
@@ -467,6 +512,7 @@ class ClusterState:
         nodes: Sequence[int],
         out_elements: int,
         inputs: Sequence[int],
+        kind: Optional[str] = None,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Vectorized ``simulate_cost_detail`` over *all* placement options.
 
@@ -528,7 +574,7 @@ class ClusterState:
         est = np.empty(n)
         estimate = self.clocks_pipe.estimate_finish
         for i in range(n):
-            est[i] = estimate(nodes[i], work, in_objs, xfers[i])
+            est[i] = estimate(nodes[i], work, in_objs, xfers[i], kind=kind)
         return (
             self.cost_model.objective_batch(S),
             np.asarray(moved),

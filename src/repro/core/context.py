@@ -55,6 +55,7 @@ class ArrayContext:
         gc: Optional[bool] = None,
         mem_watermarks: Tuple[float, float] = (0.9, 0.75),
         trace: Union[bool, int, object] = False,
+        calibration: Optional[object] = None,
     ):
         # backend: the block-kernel execution substrate (``repro.backend``):
         # "numpy" (reference interpreter), "jax" (compiled, device-resident),
@@ -79,6 +80,20 @@ class ArrayContext:
         if node_grid.num_nodes != cluster.num_nodes:
             raise ValueError("node_grid must factor the cluster's node count")
         self.node_grid = node_grid
+        # measured-cost calibration (repro.obs.calibrate): ``calibration`` is
+        # a CalibrationProfile, a dict, or a path to a profile JSON.  The
+        # fitted per-op-kind compute coefficients and link alpha/beta replace
+        # the CostModel's default constants before any clock state is built,
+        # so schedulers, chaos clocks and the memory manager all see the
+        # calibrated model.  The profile signature is folded into the plan
+        # cache's config signature below: swapping profiles invalidates plans.
+        if calibration is not None:
+            from repro.obs.calibrate import load_profile
+
+            self.calibration = load_profile(calibration)
+            cost_model = self.calibration.cost_model(cost_model)
+        else:
+            self.calibration = None
         self.state = ClusterState(cluster, cost_model=cost_model, system=system)
         self.pipeline = pipeline
         self.backend = backend
@@ -130,6 +145,7 @@ class ArrayContext:
             cluster.intra_node_coeff, system, cm.mode, cm.bytes_per_element,
             cm.hbm_bw, cm.link_bw, self.scheduler.name,
             getattr(self.scheduler, "dest_hint", False), seed, auto_layout,
+            cm.calibration_sig,
         )).encode())
         # flight recorder (core.trace): ``trace`` is False (off), True
         # (default capacity), an int capacity, or a FlightRecorder to share.

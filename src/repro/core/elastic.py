@@ -61,6 +61,9 @@ def elastic_relayout(
         # signature keys its plans separately, so stale plans never hit, and
         # post-scale iterations keep amortizing once they re-record
         plan_cache=old_ctx.plan_cache or False,
+        # a calibrated cost model survives the resize: the new ClusterState's
+        # clocks keep predicting measured time
+        calibration=old_ctx.calibration,
     )
     # share physical storage: the object store outlives the re-plan
     new_ctx.executor = old_ctx.executor

@@ -139,6 +139,15 @@ class Executor:
         # retirement, replay and memory events are recorded.  None keeps
         # every hot path at one attribute load + is-None test.
         self.tracer = None
+        # measured-cost hooks (repro.obs.calibrate / repro.obs.controller):
+        # ``profile_sync`` blocks on the backend after every op so retire
+        # wall times are truly per-op (async backends dispatch eagerly) —
+        # harness-only, it changes wall timing, never values or simulated
+        # clocks.  ``drain_hook`` is called with each retired out_id during
+        # a drain (observed-load controller sampling); None keeps the drain
+        # at one is-None test per retirement.
+        self.profile_sync = False
+        self.drain_hook = None
         if mode == "sim":
             self.backend = None
             self.dtype = dtype or "float64"
@@ -320,14 +329,32 @@ class Executor:
         # operands flow to the backend in their resident representation
         # (numpy arrays / jax device arrays) — no host round-trip here
         ins = [self.get(i) for i in in_ids]
-        out = self.backend.execute(op, meta, ins, placement)
+        if tr is not None:
+            # measured wall time per op: the calibration/drift signal.
+            # profile_sync blocks async backends so the window covers the
+            # kernel, not just its dispatch.
+            w0 = perf_counter()
+            out = self.backend.execute(op, meta, ins, placement)
+            if self.profile_sync:
+                self.backend.wait(out)
+            wall_s = perf_counter() - w0
+        else:
+            out = self.backend.execute(op, meta, ins, placement)
         self.stats.elements_computed += out_elements
         self.store[out_id] = out
         self.memory.on_materialize(out_id, placement[0], out_elements)
         self.memory.unpin(in_ids)
         if tr is not None:
+            # ``work`` mirrors the clock model's elements-touched measure
+            # (output + every input) so retire events pair one-to-one with
+            # simulated op durations for calibration fits / drift reports
+            work = out_elements
+            for i in in_ids:
+                s = self.shapes[self.resolve(i)]
+                work += int(np.prod(s)) if s else 1
             tr.record("retire", op, placement[0], placement[1],
-                      args={"out": out_id, "elements": out_elements})
+                      args={"out": out_id, "elements": out_elements,
+                            "work": work, "wall_s": wall_s})
         if self.chaos is None:
             self.memory.drain_stalls()  # stats keep them; nominal clocks don't
         return stall
@@ -410,6 +437,8 @@ class Executor:
             self._execute(head.out_id, head.op, head.meta, head.in_ids, head.placement)
             if self.retire_log is not None:
                 self.retire_log.append(head.out_id)
+            if self.drain_hook is not None:
+                self.drain_hook(head.out_id)
             executed += 1
             offer(qkey)
             for waiter in waiting.pop(head.out_id, ()):
@@ -563,6 +592,8 @@ class Executor:
                 head.out_id, None))
             if self.retire_log is not None:
                 self.retire_log.append(head.out_id)
+            if self.drain_hook is not None:
+                self.drain_hook(head.out_id)
             executed += 1
         # end-of-drain sweeps: OOMs and failures timed inside this drain's
         # makespan fire even if no op ever started on the node after t

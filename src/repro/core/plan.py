@@ -342,7 +342,8 @@ def replay_plan(plan: PlacementPlan, verts: List[Vertex], state, executor,
             continue
         in_vids = [vid_of[c] for c in in_cids]
         t0 = perf_counter()
-        eta = transition(pl[0], out_vid, elements, in_vids, worker=pl[1])
+        eta = transition(pl[0], out_vid, elements, in_vids, worker=pl[1],
+                         kind=op)
         run_op(out_vid, op, meta, in_vids, pl, eta=eta)
         dispatch_s += perf_counter() - t0
         if v is not None:

@@ -139,7 +139,8 @@ class SchedulerBase:
             executor.tracer.record("sched", v.op or "add", node, worker,
                                    0.0, 0.0, (v.vid, n_options))
         t0 = perf_counter() if stats is not None else 0.0
-        eta = state.transition(node, v.vid, v.elements, in_ids, worker=worker)
+        eta = state.transition(node, v.vid, v.elements, in_ids, worker=worker,
+                               kind=v.op)
         executor.run_op(v.vid, v.op, v.meta, in_ids, (node, worker), eta=eta)
         # the vertex object is the reachability root for its block: while any
         # leaf referencing the vid is alive the block stays resident (GC)
@@ -286,7 +287,7 @@ class LSHS(SchedulerBase):
             return options[0]
         in_ids = [c.vid for c in v.children]
         objective, moved, est, load = state.simulate_cost_batch(
-            options, v.elements, in_ids)
+            options, v.elements, in_ids, kind=v.op)
         # min over lexicographic keys returns the first minimum, matching the
         # scalar loop's strict-< update rule (lowest option index on ties)
         keys = zip(objective.tolist(), moved.tolist(), est.tolist(), load.tolist())
@@ -353,7 +354,7 @@ def chaos_placement(state: ClusterState, engine, op,
     shape = ex.shapes.get(op.out_id)
     out_elements = int(np.prod(shape)) if shape else 1
     objective, moved, _est, load = state.simulate_cost_batch(
-        candidates, out_elements, known)
+        candidates, out_elements, known, kind=getattr(op, "op", None))
     proj = [engine.project(op, placement=(c, None)) for c in candidates]
     keys = zip(proj, objective.tolist(), moved.tolist(), load.tolist(),
                candidates)

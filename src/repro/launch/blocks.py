@@ -122,7 +122,28 @@ def main() -> None:
                     help="run the composed chaos scenario instead "
                          "(launch.chaos: stragglers + node death + transient "
                          "faults on logreg-Newton, fault-free comparison)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="micro-profile the live backend (repro.obs."
+                         "calibrate) and run with the fitted cost profile; "
+                         "writes the profile JSON to --profile PATH if given")
+    ap.add_argument("--profile", default=None, metavar="PATH",
+                    help="calibration profile JSON to apply to the cost "
+                         "model (written instead when --calibrate is set)")
     args = ap.parse_args()
+
+    calibration = None
+    if args.calibrate:
+        from repro.obs.calibrate import run_calibration
+        backend = "numpy" if args.backend == "sim" else args.backend
+        calibration = run_calibration(backend=backend,
+                                      nodes=min(args.nodes, 4),
+                                      workers=min(args.workers, 2),
+                                      seed=args.seed)
+        if args.profile:
+            calibration.save(args.profile)
+            print(f"# calibration profile -> {args.profile}")
+    elif args.profile:
+        calibration = args.profile
 
     if args.chaos:
         from .chaos import run_chaos_scenario
@@ -131,7 +152,7 @@ def main() -> None:
             nodes=args.nodes, workers=args.workers, backend=backend,
             iters=max(args.iters, 3), seed=args.seed,
             scheduler=args.scheduler, plan_cache=args.plan_cache,
-            trace_path=args.trace,
+            trace_path=args.trace, calibration=calibration,
         )
         print(json.dumps(report, indent=2, default=float))
         tr = report.get("trace")
@@ -154,6 +175,7 @@ def main() -> None:
         mem_capacity=args.mem_capacity,
         gc=True if args.gc else None,
         trace=args.trace is not None,
+        calibration=calibration,
     )
     out = build_workload(ctx, args.workload, args.scale, iters=args.iters,
                          reshard_method=args.reshard_method)

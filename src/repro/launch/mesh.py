@@ -26,3 +26,34 @@ def make_host_mesh(model_axis: int = 1):
 
 def mesh_axis_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def device_inventory() -> list:
+    """Enumerate the real ``jax.Device``s of the host mesh, one dict per
+    device — the device-class record a ``CalibrationProfile`` carries so a
+    profile fitted on one substrate is never silently applied to another.
+    Sorted by device id for a deterministic listing."""
+    out = []
+    for d in sorted(jax.devices(), key=lambda d: d.id):
+        out.append({
+            "id": int(d.id),
+            "platform": str(d.platform),
+            "device_kind": str(getattr(d, "device_kind", d.platform)),
+            "process_index": int(getattr(d, "process_index", 0)),
+        })
+    return out
+
+
+def device_class(backend: str = "jax") -> str:
+    """One-line device-class summary for profile metadata, e.g.
+    ``"jax:cpu (TFRT CPU) x8"``.  Falls back to ``"<backend>:host"`` when
+    jax device enumeration is unavailable (numpy/sim backends never need
+    real devices)."""
+    try:
+        inv = device_inventory()
+    except Exception:  # pragma: no cover - no jax runtime
+        return f"{backend}:host"
+    if not inv:
+        return f"{backend}:host"
+    d = inv[0]
+    return f"{backend}:{d['platform']} ({d['device_kind']}) x{len(inv)}"

@@ -4,11 +4,12 @@
 
 Prints event counts, per-track makespans, the makespan decomposition
 (compute / transfer / queue-stall / retry / eviction-stall, total and per
-node) and the longest critical-path segments.  ``--json`` dumps the raw
-analysis dict instead (for scripting).  The input is the Chrome/Perfetto
-trace written by ``ArrayContext.export_trace`` or the launch drivers'
-``--trace PATH`` — the same file Perfetto renders (see ``repro.core.trace``
-for the import path).
+node), a per-op-kind duration distribution (n / p50 / p95 / p99 / max over
+the primary track's op slices, via ``repro.obs.metrics.Histogram``) and the
+longest critical-path segments.  ``--json`` dumps the raw analysis dict
+instead (for scripting).  The input is the Chrome/Perfetto trace written by
+``ArrayContext.export_trace`` or the launch drivers' ``--trace PATH`` — the
+same file Perfetto renders (see ``repro.core.trace`` for the import path).
 """
 from __future__ import annotations
 
@@ -17,6 +18,41 @@ import json
 import sys
 
 from repro.obs.critical_path import BUCKETS, analyze, summary_line, top_segments
+from repro.obs.metrics import Histogram
+
+_US = 1e6
+
+
+def op_histograms(trace: dict) -> dict:
+    """Per-op-kind duration histograms over the primary track's op slices.
+    Returns ``{kind: Histogram}`` with durations in seconds."""
+    hists: dict = {}
+    for ev in trace.get("traceEvents", ()):
+        if ev.get("ph") != "X" or ev.get("cat") != "op":
+            continue
+        kind = ev.get("name", "?")
+        h = hists.get(kind)
+        if h is None:
+            h = hists[kind] = Histogram(kind)
+        h.observe(ev.get("dur", 0.0) / _US)
+    return hists
+
+
+def histogram_lines(hists: dict) -> list:
+    """The op-duration distribution table (bucketed quantiles: each value is
+    the histogram bucket's upper bound, like the metrics snapshots)."""
+    if not hists:
+        return []
+    lines = [f"# op durations (s, bucketed quantiles):",
+             f"#   {'op kind':<16} {'n':>6} {'p50':>10} {'p95':>10} "
+             f"{'p99':>10} {'max':>10}"]
+    for kind in sorted(hists):
+        h = hists[kind]
+        lines.append(
+            f"#   {kind:<16} {h.count:>6} {h.quantile(0.5):>10.3e} "
+            f"{h.quantile(0.95):>10.3e} {h.quantile(0.99):>10.3e} "
+            f"{h.max:>10.3e}")
+    return lines
 
 
 def render(analysis: dict, trace: dict, top: int = 3) -> str:
@@ -49,6 +85,7 @@ def render(analysis: dict, trace: dict, top: int = 3) -> str:
         for node, row in per_node.items():
             vals = "  ".join(f"{row[b]:9.2f}" for b in BUCKETS)
             lines.append(f"#   {node:<6}{vals}")
+    lines.extend(histogram_lines(op_histograms(trace)))
     segs = top_segments(analysis, n=top)
     if segs:
         lines.append(f"# top {len(segs)} critical-path segments:")
@@ -70,6 +107,11 @@ def main(argv=None) -> int:
     analysis = analyze(trace)
     if args.json:
         analysis.pop("segments", None)
+        analysis["op_durations"] = {
+            kind: {"n": h.count, "sum_s": h.sum, "p50": h.quantile(0.5),
+                   "p95": h.quantile(0.95), "p99": h.quantile(0.99),
+                   "max": h.max}
+            for kind, h in sorted(op_histograms(trace).items())}
         print(json.dumps(analysis, indent=2, default=float))
     else:
         print(render(analysis, trace, top=args.top))

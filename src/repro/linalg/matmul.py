@@ -48,7 +48,7 @@ def summa_matmul(ctx: ArrayContext, A: GraphArray, B: GraphArray) -> GraphArray:
                 mm = Vertex("op", "matmul", infer_shape("matmul", meta, [ca.shape, cb.shape]),
                             [ca, cb], meta)
                 eta = state.transition(node, mm.vid, mm.elements, [ca.vid, cb.vid],
-                                       worker=worker)
+                                       worker=worker, kind="matmul")
                 ex.run_op(mm.vid, "matmul", meta, [ca.vid, cb.vid], (node, worker),
                           eta=eta)
                 mm.to_leaf(node, worker)
@@ -60,7 +60,7 @@ def summa_matmul(ctx: ArrayContext, A: GraphArray, B: GraphArray) -> GraphArray:
                     # in-place accumulate: output reuses the buffer -> no new
                     # memory charge beyond the partial just produced
                     eta = state.transition(node, add.vid, 0, [prev.vid, mm.vid],
-                                           worker=worker)
+                                           worker=worker, kind="add")
                     ex.run_op(add.vid, "add", {}, [prev.vid, mm.vid], (node, worker),
                               eta=eta)
                     add.to_leaf(node, worker)

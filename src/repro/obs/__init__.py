@@ -4,17 +4,49 @@ critical-path attribution over ``repro.core.trace`` flight-recorder events.
 This package depends only on the standard library — ``repro.core`` imports
 nothing from here at module scope, so there is no import cycle.
 """
-from .critical_path import analyze, summary_line, top_segments
+from .calibrate import (
+    CalibrationError,
+    CalibrationProfile,
+    fit_affine,
+    fit_profile,
+    load_profile,
+    run_calibration,
+    samples_from_recorder,
+)
+from .controller import (
+    ControllerAction,
+    ControllerPolicy,
+    ObservedLoadController,
+)
+from .critical_path import (
+    analyze,
+    drift_lines,
+    drift_report,
+    summary_line,
+    top_segments,
+)
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 from .perfetto import export_chrome_trace, write_chrome_trace
 
 __all__ = [
+    "CalibrationError",
+    "CalibrationProfile",
+    "ControllerAction",
+    "ControllerPolicy",
     "Counter",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "ObservedLoadController",
     "analyze",
+    "drift_lines",
+    "drift_report",
     "export_chrome_trace",
+    "fit_affine",
+    "fit_profile",
+    "load_profile",
+    "run_calibration",
+    "samples_from_recorder",
     "summary_line",
     "top_segments",
     "write_chrome_trace",

@@ -25,6 +25,7 @@ then residual ``queue_stall`` (dependency or channel wait).
 from __future__ import annotations
 
 import bisect
+import math
 from typing import Any, Dict, List, Optional, Tuple
 
 _US = 1e6
@@ -257,6 +258,82 @@ def top_segments(analysis: Dict[str, Any], n: int = 3) -> List[str]:
         f"[{s['t0']:.3e}s, {s['t1']:.3e}s] {100.0 * s['dur_s'] / mk:5.1f}%"
         for s in segs
     ]
+
+
+_DRIFT_TRACKS = ("chaos", "pipe", "sync")
+
+
+def drift_report(recorder, track: Optional[str] = None) -> Dict[str, Any]:
+    """Predicted-vs-measured drift per op kind over a flight-recorder run.
+
+    Pairs each op's *simulated* duration on one clock track (``op`` events,
+    default: the primary track — ``chaos`` if present, else ``pipe``) with
+    its *measured* backend wall time (``retire`` events carrying ``wall_s``,
+    recorded when ``Executor.profile_sync`` timed the kernel).  Drift is
+    ``|ln(predicted_s / measured_s)|`` — symmetric and robust when the
+    hand-picked constants are orders of magnitude off; 0 means the clocks
+    predict measured time exactly.  Ops without a timed retirement are
+    ignored, so the report is meaningful only for profiled runs."""
+    measured: Dict[Any, float] = {}
+    kinds: Dict[Any, str] = {}
+    sim_by_track: Dict[str, Dict[Any, float]] = {}
+    for ev in recorder.iter_events():
+        if ev.kind == "retire":
+            wall = ev.args.get("wall_s", 0.0)
+            if wall > 0.0:
+                measured[ev.args["out"]] = wall
+                kinds[ev.args["out"]] = ev.name
+        elif ev.kind == "op":
+            sim_by_track.setdefault(ev.args["track"], {})[
+                ev.args["out"]] = max(ev.t1 - ev.t0, 0.0)
+    if track is None:
+        track = next((t for t in _DRIFT_TRACKS if t in sim_by_track),
+                     "pipe")
+    sim = sim_by_track.get(track, {})
+    per_kind: Dict[str, Dict[str, float]] = {}
+    tot_pred = tot_meas = 0.0
+    for out, wall in measured.items():
+        pred = sim.get(out)
+        if pred is None:
+            continue
+        row = per_kind.setdefault(kinds[out], {
+            "n": 0, "predicted_s": 0.0, "measured_s": 0.0})
+        row["n"] += 1
+        row["predicted_s"] += pred
+        row["measured_s"] += wall
+        tot_pred += pred
+        tot_meas += wall
+
+    def _drift(pred: float, meas: float) -> float:
+        if pred <= 0.0 or meas <= 0.0:
+            return float("inf") if pred != meas else 0.0
+        return abs(math.log(pred / meas))
+
+    for row in per_kind.values():
+        row["drift"] = _drift(row["predicted_s"], row["measured_s"])
+    return {
+        "track": track,
+        "n_ops": sum(r["n"] for r in per_kind.values()),
+        "predicted_s": tot_pred,
+        "measured_s": tot_meas,
+        "drift": _drift(tot_pred, tot_meas),
+        "per_kind": {k: per_kind[k] for k in sorted(per_kind)},
+    }
+
+
+def drift_lines(report: Dict[str, Any]) -> List[str]:
+    """Human-readable drift table (one line per op kind plus a total)."""
+    out = [f"{'op kind':<16} {'n':>5} {'predicted_s':>12} "
+           f"{'measured_s':>12} {'drift':>8}"]
+    rows = list(report.get("per_kind", {}).items())
+    rows.append(("TOTAL", {"n": report.get("n_ops", 0),
+                           "predicted_s": report.get("predicted_s", 0.0),
+                           "measured_s": report.get("measured_s", 0.0),
+                           "drift": report.get("drift", 0.0)}))
+    for kind, r in rows:
+        out.append(f"{kind:<16} {r['n']:>5} {r['predicted_s']:>12.3e} "
+                   f"{r['measured_s']:>12.3e} {r['drift']:>8.3f}")
+    return out
 
 
 def summary_line(analysis: Dict[str, Any],

@@ -1,0 +1,257 @@
+"""Measured-cost calibration (repro.obs.calibrate) and the observed-load
+controller (repro.obs.controller).
+
+The anchor invariants:
+
+* **Pure fit** — ``fit_profile`` is a function of the recorded event *set*:
+  known synthetic α/β/γ are recovered exactly (closed-form least squares on
+  noiseless lines), and the same events in any order yield a byte-identical
+  profile (``dumps`` equality).
+* **Versioned artifact** — profiles round-trip through JSON/disk unchanged;
+  a foreign ``schema_version`` is a clear ``CalibrationError``, never a
+  silent misread.
+* **Calibration changes clocks, not values** — a calibrated context runs
+  the same workload to the same result (up to scheduling reassociation).
+* **Deterministic control** — the policy fires from simulated/counter
+  signals only, so same inputs ⇒ same actions, and the composed chaos
+  scenario's determinism gate holds with the controller attached.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ArrayContext, ClusterSpec, FlightRecorder
+from repro.obs import (
+    CalibrationError,
+    CalibrationProfile,
+    ControllerPolicy,
+    ObservedLoadController,
+    fit_affine,
+    fit_profile,
+    load_profile,
+)
+
+# -- fit_affine ---------------------------------------------------------------
+
+
+def test_fit_affine_recovers_exact_line():
+    alpha, beta = 3e-5, 2e-9
+    pts = [(x, alpha + beta * x) for x in (1e3, 1e4, 1e5, 1e6)]
+    a, b = fit_affine(pts)
+    assert a == pytest.approx(alpha, rel=1e-9)
+    assert b == pytest.approx(beta, rel=1e-9)
+
+
+def test_fit_affine_clamps_negative_slope_to_flat():
+    # decreasing y over x: slope noise, expect a flat latency-only model
+    a, b = fit_affine([(1.0, 5.0), (2.0, 4.0), (3.0, 3.0)])
+    assert b == 0.0
+    assert a == pytest.approx(4.0)  # mean of y
+
+
+def test_fit_affine_clamps_negative_intercept_to_origin():
+    # steep line through a negative intercept: forced through the origin
+    a, b = fit_affine([(1.0, 0.5), (2.0, 2.5), (3.0, 4.5)])
+    assert a == 0.0
+    assert b > 0.0
+
+
+def test_fit_affine_single_point_and_empty():
+    assert fit_affine([(100.0, 2.0)]) == (0.0, 0.02)
+    with pytest.raises(CalibrationError):
+        fit_affine([])
+
+
+# -- synthetic-stream fitting -------------------------------------------------
+
+KINDS = {"matmul": (2e-5, 3e-9), "add": (1e-6, 4e-10)}
+XFERS = {"h2d": (5e-6, 1e-10), "d2h": (7e-6, 2e-10)}
+
+
+def synthetic_recorder(order=1):
+    """A recorder holding noiseless events on known α/β/γ lines; ``order``
+    flips the emission order to prove the fit is order-independent."""
+    rec = FlightRecorder()
+    events = []
+    for kind, (a, b) in KINDS.items():
+        for work in (256.0, 4096.0, 65536.0):
+            events.append(("retire", kind,
+                           {"wall_s": a + b * work, "work": work}))
+    for cls, (a, b) in XFERS.items():
+        for nbytes in (2048.0, 32768.0, 524288.0):
+            events.append(("xfer_probe", cls,
+                           {"cls": cls, "bytes": nbytes,
+                            "wall_s": a + b * nbytes}))
+    events.append(("gamma_probe", "gamma",
+                   {"dispatch_s": 0.012, "n_rfc": 300}))
+    for kind, name, args in events[::order]:
+        rec.record(kind, name, args=args)
+    return rec
+
+
+def test_fit_profile_recovers_synthetic_coefficients():
+    p = fit_profile(synthetic_recorder(), backend="numpy")
+    for kind, (a, b) in KINDS.items():
+        fa, fb = p.compute_coeffs[kind]
+        assert fa == pytest.approx(a, rel=1e-6)
+        assert fb == pytest.approx(b, rel=1e-6)
+    for cls, (a, b) in XFERS.items():
+        fa, fb = p.transfer_coeffs[cls]
+        assert fa == pytest.approx(a, rel=1e-6)
+        assert fb == pytest.approx(b, rel=1e-6)
+    # derived inter-node proxy: mean of the measured h2d/d2h lines
+    assert "link" in p.transfer_coeffs
+    assert p.gamma_s == pytest.approx(0.012 / 300, rel=1e-12)
+
+
+def test_fit_profile_is_order_independent_and_bit_identical():
+    p1 = fit_profile(synthetic_recorder(order=1), backend="numpy")
+    p2 = fit_profile(synthetic_recorder(order=-1), backend="numpy")
+    assert p1.dumps() == p2.dumps()
+    assert p1.signature() == p2.signature()
+
+
+def test_fit_profile_requires_timed_events():
+    with pytest.raises(CalibrationError, match="profile_sync"):
+        fit_profile(FlightRecorder(), backend="numpy")
+
+
+# -- the persisted artifact ---------------------------------------------------
+
+
+def test_profile_json_roundtrip(tmp_path):
+    p = fit_profile(synthetic_recorder(), backend="numpy")
+    path = tmp_path / "profile.json"
+    p.save(str(path))
+    q = CalibrationProfile.load(str(path))
+    assert q.to_json() == p.to_json()
+    assert q.signature() == p.signature()
+    # load_profile accepts objects, dicts, and paths uniformly
+    assert load_profile(p) is p
+    assert load_profile(p.to_json()).dumps() == p.dumps()
+    assert load_profile(str(path)).dumps() == p.dumps()
+
+
+def test_profile_schema_mismatch_is_a_clear_error():
+    doc = fit_profile(synthetic_recorder(), backend="numpy").to_json()
+    doc["schema_version"] = 99
+    with pytest.raises(CalibrationError, match="schema_version"):
+        CalibrationProfile.from_json(doc)
+
+
+def test_profile_rejects_malformed_files(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("not json {")
+    with pytest.raises(CalibrationError, match="not valid JSON"):
+        CalibrationProfile.load(str(bad))
+
+
+# -- context integration ------------------------------------------------------
+
+
+def make_ctx(k=4, r=2, **kw):
+    kw.setdefault("backend", "numpy")
+    kw.setdefault("pipeline", True)
+    return ArrayContext(cluster=ClusterSpec(k, r), node_grid=(k, 1),
+                        seed=0, **kw)
+
+
+def test_calibrated_context_swaps_cost_model():
+    p = fit_profile(synthetic_recorder(), backend="numpy")
+    ctx = make_ctx(calibration=p)
+    cm = ctx.state.cost_model
+    assert cm.calibrated
+    assert cm.calibration_sig == p.signature()
+    assert cm.compute_coeffs == p.compute_coeffs
+    base = make_ctx()
+    assert not base.state.cost_model.calibrated
+    # the fitted coefficients are part of the plan-cache config signature
+    assert ctx._config_sig != base._config_sig
+
+
+def test_calibration_changes_clocks_not_values():
+    from repro.launch.workloads import logreg_newton_loop
+
+    p = fit_profile(synthetic_recorder(), backend="numpy")
+    out = []
+    for calibration in (None, p):
+        ctx = make_ctx(calibration=calibration)
+        _g, _h, beta = logreg_newton_loop(ctx, 256, 16, 8, iters=2,
+                                          reset_loads=False)
+        ctx.flush()
+        out.append(beta.to_numpy())
+    np.testing.assert_allclose(out[0], out[1], rtol=1e-9, atol=1e-12)
+
+
+# -- the observed-load controller ---------------------------------------------
+
+
+def controller_on(ctx, **policy_kw):
+    policy_kw.setdefault("warmup_iters", 0)
+    return ObservedLoadController(ControllerPolicy(**policy_kw)).attach(ctx)
+
+
+def forced_signals(ctl, **overrides):
+    sig = ctl.signals()
+    sig.update({k: float(v) for k, v in overrides.items()})
+    ctl.signals = lambda: sig
+    return ctl
+
+
+def test_controller_dead_node_grows_once():
+    ctl = controller_on(make_ctx(), cooldown_iters=0)
+    forced_signals(ctl, dead_nodes=1, utilization=0.6)
+    a = ctl.decide(1)
+    assert a is not None and a.kind == "grow" and a.to_nodes > a.from_nodes
+    # the handled death must not re-fire the grow rule every iteration
+    assert ctl.decide(2) is None
+
+
+def test_controller_warmup_and_cooldown_suppress_actions():
+    ctl = controller_on(make_ctx(), warmup_iters=2, cooldown_iters=1)
+    forced_signals(ctl, dead_nodes=1)
+    assert ctl.decide(0) is None and ctl.decide(1) is None  # warm-up
+    assert ctl.decide(2) is not None
+    forced_signals(ctl, dead_nodes=2)
+    assert ctl.decide(3) is None          # cooldown holds
+    assert ctl.decide(4) is not None      # a *new* death fires again
+
+
+def test_controller_shrink_and_rebalance_rules():
+    ctl = controller_on(make_ctx(), cooldown_iters=0)
+    forced_signals(ctl, utilization=0.1, dead_nodes=0, mem_pressure=0)
+    a = ctl.decide(1)
+    assert a is not None and a.kind == "shrink" and a.to_nodes < a.from_nodes
+
+    ctl2 = controller_on(make_ctx(), cooldown_iters=0)
+    forced_signals(ctl2, utilization=0.6, mem_imbalance=5.0,
+                   dead_nodes=0, mem_pressure=0)
+    a2 = ctl2.decide(1)
+    assert a2 is not None and a2.kind == "rebalance"
+    assert a2.to_nodes == a2.from_nodes
+
+
+def test_controller_decisions_are_deterministic():
+    def run_once():
+        ctl = controller_on(make_ctx(), cooldown_iters=0)
+        forced_signals(ctl, dead_nodes=1, utilization=0.6)
+        for it in range(3):
+            ctl.decide(it)
+        return ctl.report()
+
+    assert run_once() == run_once()
+
+
+def test_controller_composes_with_chaos_determinism_gate():
+    """The composed scenario with no resize parameter: the controller must
+    fire at least one autonomous action and both chaos contracts (value
+    identity, trajectory determinism) must hold."""
+    from repro.launch.chaos import run_chaos_scenario
+
+    r = run_chaos_scenario(
+        nodes=8, workers=2, backend="numpy", iters=3, d=32,
+        fail_nodes=1, stragglers=2, slowdown=4.0, fault_prob=0.02,
+        controller=True,
+    )
+    assert r["controller_n_actions"] >= 1
+    assert r["identical"]
+    assert r["deterministic"]
